@@ -1,0 +1,75 @@
+"""Shared benchmark corpus + timing utilities.
+
+The paper's ALL corpus is 987 MB / 219M words — too large for this CPU
+container, so benchmarks run on a statistically matched synthetic corpus
+(Zipf unigrams, lognormal doc lengths; see text/corpus.py) at a --scale the
+runner picks.  Word *strings* are synthesized with a realistic rank/length
+profile so Table 1's compression ratio is measured against a meaningful
+"original text size" (frequent words short, like English).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import numpy as np
+
+from repro.core import drb, scoring, wtbc
+from repro.text import corpus
+
+
+@dataclasses.dataclass
+class Bench:
+    cp: corpus.SyntheticCorpus
+    idx: wtbc.WTBCIndex
+    model: object
+    aux: drb.DRBAux
+    original_bytes: int
+    build_s: float
+    build_aux_s: float
+
+
+def word_length(rank: int) -> int:
+    """English-like: frequent words are short (the/of/and...), tail ~8-12."""
+    return int(np.clip(1 + np.log2(rank + 2) * 0.9, 1, 14))
+
+
+def original_text_bytes(cp: corpus.SyntheticCorpus, model) -> int:
+    """Spaceless word model: word chars + one separator byte per token."""
+    lens = np.array([word_length(int(model.rank_of_word[w])) + 1
+                     for w in range(cp.vocab_size)], dtype=np.int64)
+    total = 0
+    for d in cp.doc_tokens:
+        total += int(lens[d].sum())
+    total += cp.n_docs * 2          # '$\n' document separators
+    return total
+
+
+def build(n_docs: int = 4000, mean_doc_len: int = 250, vocab: int = 40_000,
+          seed: int = 0, block: int = 4096) -> Bench:
+    cp = corpus.make_corpus(n_docs=n_docs, mean_doc_len=mean_doc_len,
+                            vocab_size=vocab, seed=seed)
+    t0 = time.time()
+    idx, model = wtbc.build_index(cp.doc_tokens, cp.vocab_size, block=block)
+    t1 = time.time()
+    aux = drb.build_aux(idx, model, cp.doc_tokens, eps=1e-6)
+    t2 = time.time()
+    return Bench(cp=cp, idx=idx, model=model, aux=aux,
+                 original_bytes=original_text_bytes(cp, model),
+                 build_s=t1 - t0, build_aux_s=t2 - t1)
+
+
+def time_fn(fn, reps: int = 3) -> float:
+    """Median wall seconds of an already-compiled callable."""
+    fn()                                      # warm (compile)
+    ts = []
+    for _ in range(reps):
+        t0 = time.time()
+        jax.block_until_ready(fn())
+        ts.append(time.time() - t0)
+    return float(np.median(ts))
+
+
+def csv_row(name: str, us_per_call: float, derived: str = "") -> str:
+    return f"{name},{us_per_call:.1f},{derived}"

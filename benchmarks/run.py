@@ -1,0 +1,70 @@
+"""Benchmark runner: one function per paper table + roofline report.
+
+    PYTHONPATH=src python -m benchmarks.run [--full] [--skip-distributed]
+
+Prints ``name,us_per_call,derived`` CSV rows (the harness contract).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-complete sweep (bands i-iv, 1-6 words, k=10/20)")
+    ap.add_argument("--skip-distributed", action="store_true")
+    ap.add_argument("--docs", type=int, default=2500)
+    ap.add_argument("--mean-doc-len", type=int, default=200)
+    ap.add_argument("--vocab", type=int, default=30_000)
+    args = ap.parse_args()
+
+    from benchmarks import (common, distributed_scaling, table1_compression,
+                            table2_conjunctive, table3_bagofwords)
+
+    t0 = time.time()
+    print("# building benchmark corpus ...", file=sys.stderr, flush=True)
+    bench = common.build(n_docs=args.docs, mean_doc_len=args.mean_doc_len,
+                         vocab=args.vocab)
+    print(f"# corpus: {bench.cp.n_tokens} tokens, {bench.cp.n_docs} docs, "
+          f"build {bench.build_s:.1f}s", file=sys.stderr, flush=True)
+
+    print("name,us_per_call,derived")
+    table1_compression.run(bench)
+
+    if args.full:
+        sweep = dict(n_queries=32, words_list=(1, 2, 3, 4, 6), ks=(10, 20),
+                     band_names=("i", "ii", "iii", "iv"))
+        sweep3 = dict(n_queries=32, words_list=(2, 3, 4, 6), ks=(10, 20),
+                      band_names=("i", "ii", "iii", "iv"))
+    else:
+        sweep = dict(n_queries=16, words_list=(1, 2, 4), ks=(10,),
+                     band_names=("i", "ii", "iii"))
+        sweep3 = dict(n_queries=16, words_list=(2, 4), ks=(10,),
+                      band_names=("i", "ii", "iii"))
+    table2_conjunctive.run(bench, conjunctive=True, **sweep)
+    table3_bagofwords.run(bench, **sweep3)
+
+    if not args.skip_distributed:
+        distributed_scaling.run()
+
+    # roofline summary (reads dry-run artifacts if present)
+    try:
+        from repro.analysis import roofline
+        rows = roofline.load_all("single")
+        for r in rows:
+            if r.skipped:
+                continue
+            print(common.csv_row(
+                f"roofline/{r.cell.replace(':', '__')}", 0.0,
+                f"dom={r.dominant};frac={r.roofline_fraction():.3f}"))
+    except Exception as e:  # artifacts absent: benches still usable
+        print(f"# roofline artifacts unavailable: {e}", file=sys.stderr)
+
+    print(f"# total {time.time()-t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

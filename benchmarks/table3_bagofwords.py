@@ -1,0 +1,14 @@
+"""Paper Table 3: top-k bag-of-words (OR) queries — WTBC-DR vs WTBC-DRB.
+Same harness as Table 2 with the disjunctive semantics."""
+from __future__ import annotations
+
+from benchmarks import common, table2_conjunctive
+
+
+def run(bench: common.Bench | None = None, **kw) -> dict:
+    kw.setdefault("words_list", (2, 4))
+    return table2_conjunctive.run(bench, conjunctive=False, **kw)
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,24 @@
+"""Train a reduced-config LM (same family as the assigned archs) for a few
+hundred steps on CPU with checkpoint/restart enabled.
+
+    PYTHONPATH=src python examples/train_lm.py --arch qwen3-1.7b --steps 200
+"""
+import argparse
+import sys
+
+from repro.launch import train
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-1.7b")
+    ap.add_argument("--steps", type=int, default=200)
+    args, _ = ap.parse_known_args()
+    sys.argv = ["train", "--arch", args.arch, "--smoke",
+                "--steps", str(args.steps), "--batch", "8", "--seq", "64",
+                "--ckpt-every", "50"]
+    train.main()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,121 @@
+"""Architecture registry glue: Cell (arch x shape) definitions, abstract
+input specs (ShapeDtypeStruct — no allocation), step builders, shardings.
+
+Every assigned architecture provides an ArchDef; ``launch/dryrun.py`` iterates
+``arch.cells()`` and lowers ``arch.make_step(kind)`` with
+``arch.abstract_inputs(shape)`` under the production mesh.  Smoke tests use
+``arch.config(smoke=True)`` + ``arch.concrete_inputs`` at reduced size.
+"""
+from __future__ import annotations
+
+import abc
+import dataclasses
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import layers as L
+from repro.optim import adamw
+
+F32, I32 = jnp.float32, jnp.int32
+
+
+@dataclasses.dataclass(frozen=True)
+class Cell:
+    arch: str
+    shape: str
+    kind: str                         # train | prefill | decode | serve | retrieval
+    skip: str | None = None           # reason if this cell is skipped
+    rules_overrides: tuple = ()       # ((logical, mesh_axes), ...)
+
+    @property
+    def cell_id(self) -> str:
+        return f"{self.arch}:{self.shape}"
+
+
+def sds(shape, dtype) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def pad_to(n: int, mult: int) -> int:
+    return -(-n // mult) * mult
+
+
+def make_rules(mesh_axis_names: tuple[str, ...], cell: Cell | None = None,
+               extra: dict | None = None) -> L.MeshRules:
+    """Logical rules filtered to the axes that exist on this mesh, with
+    per-cell overrides applied."""
+    overrides = dict(extra or {})
+    if cell is not None:
+        overrides.update(dict(cell.rules_overrides))
+    merged = dict(L.DEFAULT_RULES)
+    merged.update(overrides)
+
+    def keep(v):
+        if v is None:
+            return None
+        axes = (v,) if isinstance(v, str) else tuple(v)
+        axes = tuple(a for a in axes if a in mesh_axis_names)
+        if not axes:
+            return None
+        return axes if len(axes) > 1 else axes[0]
+
+    return L.MeshRules.make({k: keep(v) for k, v in merged.items()})
+
+
+class ArchDef(abc.ABC):
+    name: str
+    family: str
+
+    @abc.abstractmethod
+    def config(self, smoke: bool = False): ...
+
+    def config_for(self, shape: str, smoke: bool = False):
+        """Per-shape config override hook (EGNN varies d_feat/classes)."""
+        return self.config(smoke)
+
+    @abc.abstractmethod
+    def cells(self) -> list[Cell]: ...
+
+    @abc.abstractmethod
+    def init_params(self, key, cfg): ...
+
+    @abc.abstractmethod
+    def param_specs(self, cfg, rules: L.MeshRules): ...
+
+    @abc.abstractmethod
+    def abstract_inputs(self, cfg, shape: str) -> dict: ...
+
+    @abc.abstractmethod
+    def input_specs(self, cfg, shape: str, rules: L.MeshRules) -> dict: ...
+
+    @abc.abstractmethod
+    def make_step(self, cfg, kind: str, rules: L.MeshRules) -> Callable: ...
+
+    # ---- shared helpers ------------------------------------------------------
+
+    def abstract_params(self, cfg):
+        return jax.eval_shape(functools.partial(self.init_params, cfg=cfg),
+                              jax.random.PRNGKey(0))
+
+    def optimizer_cfg(self) -> adamw.AdamWConfig:
+        return adamw.AdamWConfig()
+
+    def train_wrapper(self, loss_fn, cfg, rules):
+        ocfg = self.optimizer_cfg()
+
+        def train_step(params, opt_state, batch):
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch, cfg, rules)
+            params, opt_state, om = adamw.apply_updates(params, opt_state,
+                                                        grads, ocfg)
+            return params, opt_state, {**metrics, "loss": loss, **om}
+
+        return train_step
+
+    def flops_note(self, cfg) -> dict:
+        """Analytic MODEL_FLOPS hints for the roofline (per family)."""
+        return {}

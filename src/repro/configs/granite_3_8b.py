@@ -1,0 +1,21 @@
+"""granite-3-8b: 40L d4096 32H (GQA kv=8, head 128) d_ff 12800.
+True vocab 49155 is padded to 49408 (= 193*256) so the vocab dim divides the
+model axis (16); labels never touch the pad rows.  [hf:ibm-granite]"""
+import jax.numpy as jnp
+
+from repro.configs.lm_common import LMArch, smoke_lm
+from repro.models import transformer as T
+
+FULL = T.LMConfig(
+    name="granite-3-8b",
+    n_layers=40, d_model=4096, n_heads=32, n_kv_heads=8, d_head=128,
+    d_ff=12800, vocab=49408,        # padded from 49155 for TP divisibility
+    dtype=jnp.bfloat16)
+
+# Sequence-parallel TP (EXPERIMENTS.md §Perf hillclimb 2): residual-stream
+# activations shard S over 'model' between blocks, so the per-layer TP
+# all-reduce of (B, S, D) becomes reduce-scatter + all-gather in bf16 at S/16
+# per chip (XLA had hoisted that AR into f32 norm fusions: 2x bytes).  GQA KV
+# all-gathers are tiny (8 kv heads).  'heads' must then stay unsharded.
+ARCH = LMArch("granite-3-8b", FULL, smoke_lm("granite-3-8b", FULL), long_ok=False,
+              extra_rules=(("seq", "model"),))

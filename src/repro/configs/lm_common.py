@@ -1,0 +1,134 @@
+"""Shared ArchDef for the five LM-family transformers.
+
+Shapes (the assigned set — seq_len x global_batch):
+  train_4k     S=4096   B=256   -> train_step
+  prefill_32k  S=32768  B=32    -> prefill
+  decode_32k   S=32768  B=128   -> serve_step (decode, KV cache of S)
+  long_500k    S=524288 B=1     -> serve_step; needs sub-quadratic attention —
+                                   runs only for archs with windowed/chunked
+                                   layers (gemma2, llama4); skipped for pure
+                                   full-attention archs (DESIGN.md §5)
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchDef, Cell, sds, F32, I32
+from repro.models import layers as L
+from repro.models import transformer as T
+from repro.optim import adamw
+
+LM_SHAPES = {
+    "train_4k": dict(kind="train", seq=4096, batch=256),
+    "prefill_32k": dict(kind="prefill", seq=32768, batch=32),
+    "decode_32k": dict(kind="decode", seq=32768, batch=128),
+    "long_500k": dict(kind="decode", seq=524288, batch=1),
+}
+
+LONG_RULES = (("batch", None), ("kv_seq", ("pod", "data", "model")))
+
+
+class LMArch(ArchDef):
+    family = "lm"
+
+    def __init__(self, name: str, cfg_full: T.LMConfig, cfg_smoke: T.LMConfig,
+                 long_ok: bool, extra_rules: tuple = ()):
+        self.name = name
+        self._full = cfg_full
+        self._smoke = cfg_smoke
+        self._long_ok = long_ok
+        self._extra_rules = tuple(extra_rules)
+
+    def config(self, smoke: bool = False) -> T.LMConfig:
+        return self._smoke if smoke else self._full
+
+    def cells(self) -> list[Cell]:
+        out = []
+        for shape, meta in LM_SHAPES.items():
+            skip = None
+            rules = self._extra_rules
+            if shape == "long_500k":
+                rules = rules + LONG_RULES
+                if not self._long_ok:
+                    skip = ("pure full-attention arch: 500k decode has no "
+                            "sub-quadratic path (DESIGN.md §5)")
+            out.append(Cell(self.name, shape, meta["kind"], skip=skip,
+                            rules_overrides=rules))
+        return out
+
+    # ---- params --------------------------------------------------------------
+
+    def init_params(self, key, cfg):
+        return T.init_params(key, cfg)
+
+    def param_specs(self, cfg, rules):
+        return T.param_specs(cfg, rules)
+
+    # ---- inputs ---------------------------------------------------------------
+
+    def abstract_inputs(self, cfg, shape: str) -> dict:
+        m = LM_SHAPES[shape]
+        B, S = m["batch"], m["seq"]
+        if m["kind"] == "train":
+            return {"batch": {"tokens": sds((B, S), I32),
+                              "labels": sds((B, S), I32)}}
+        if m["kind"] == "prefill":
+            return {"tokens": sds((B, S), I32)}
+        return {"caches": T.cache_shapes(cfg, B, S),
+                "tokens": sds((B,), I32),
+                "cache_len": sds((), I32)}
+
+    def input_specs(self, cfg, shape: str, rules) -> dict:
+        m = LM_SHAPES[shape]
+        if m["kind"] == "train":
+            tok = rules.spec("batch", "seq")
+            return {"batch": {"tokens": tok, "labels": tok}}
+        if m["kind"] == "prefill":
+            return {"tokens": rules.spec("batch", "seq")}
+        cache = P(None, *rules.spec("batch", "kv_seq", "kv_heads", None))
+        return {"caches": [ (cache, cache) for _ in cfg.pattern ],
+                "tokens": rules.spec("batch"),
+                "cache_len": P()}
+
+    # ---- steps ----------------------------------------------------------------
+
+    def make_step(self, cfg, kind: str, rules):
+        if kind == "train":
+            return self.train_wrapper(T.loss_fn, cfg, rules)
+        if kind == "prefill":
+            def prefill_step(params, tokens):
+                logits, caches = T.prefill(params, tokens, cfg, rules)
+                return logits, caches
+            return prefill_step
+        if kind == "decode":
+            def serve_step(params, caches, tokens, cache_len):
+                return T.decode_step(params, caches, tokens, cache_len, cfg, rules)
+            return serve_step
+        raise ValueError(kind)
+
+    def flops_note(self, cfg) -> dict:
+        return {"params": cfg.param_count(),
+                "active_params": cfg.active_param_count()}
+
+
+def smoke_lm(name: str, full: T.LMConfig) -> T.LMConfig:
+    """Reduced same-family config: keeps pattern/features, shrinks dims."""
+    moe = None
+    if full.moe is not None:
+        moe = dataclasses_replace_moe(full.moe)
+    import dataclasses
+    return dataclasses.replace(
+        full, name=name + "-smoke",
+        n_layers=2 * len(full.pattern), d_model=64,
+        n_heads=4, n_kv_heads=2, d_head=16, d_ff=128, vocab=512,
+        window=min(full.window, 8) if full.window else 0,
+        moe=moe, dtype=jnp.float32, remat=False)
+
+
+def dataclasses_replace_moe(m):
+    import dataclasses
+    return dataclasses.replace(m, n_experts=4, top_k=min(m.top_k, 2), d_ff=64)

@@ -1,0 +1,97 @@
+"""Shared ArchDef for the four recsys towers.
+
+Shapes (assigned set):
+  train_batch     B=65,536                     -> train_step
+  serve_p99       B=512                        -> online inference
+  serve_bulk      B=262,144                    -> offline scoring
+  retrieval_cand  B=1, n_candidates=1,000,000  -> top-k candidate scoring
+                  (batched-dot over the candidate axis, never a loop —
+                   DESIGN.md §5 ties this to the paper's rank-candidates
+                   primitive / kernels/topk_score)
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchDef, Cell, sds, F32, I32
+from repro.models import recsys
+
+N_CANDIDATES = 1_000_000
+
+SHAPES = {
+    "train_batch": dict(kind="train", batch=65536),
+    "serve_p99": dict(kind="serve", batch=512),
+    "serve_bulk": dict(kind="serve", batch=262144),
+    "retrieval_cand": dict(kind="retrieval", batch=1),
+}
+
+
+class RecsysArch(ArchDef):
+    family = "recsys"
+
+    def __init__(self, name: str, full: recsys.RecsysConfig,
+                 smoke: recsys.RecsysConfig):
+        self.name = name
+        self._full, self._smoke = full, smoke
+
+    def config(self, smoke: bool = False):
+        return self._smoke if smoke else self._full
+
+    def cells(self) -> list[Cell]:
+        return [Cell(self.name, s, m["kind"]) for s, m in SHAPES.items()]
+
+    def init_params(self, key, cfg):
+        return recsys.init_params(key, cfg)
+
+    def param_specs(self, cfg, rules):
+        return recsys.param_specs(cfg, rules)
+
+    def _batch(self, cfg, B: int, train: bool) -> dict:
+        if cfg.interaction == "self-attn-seq":
+            b = {"seq": sds((B, cfg.seq_len), I32)}
+            if train:
+                b["pos"] = sds((B, cfg.seq_len), I32)
+                b["neg"] = sds((B, cfg.seq_len), I32)
+            return b
+        b = {"sparse": sds((B, cfg.n_sparse), I32)}
+        if cfg.n_dense:
+            b["dense"] = sds((B, cfg.n_dense), F32)
+        if train:
+            b["label"] = sds((B,), I32)
+        return b
+
+    def abstract_inputs(self, cfg, shape: str) -> dict:
+        m = SHAPES[shape]
+        if m["kind"] == "retrieval":
+            b = self._batch(cfg, 1, train=False)
+            b["candidates"] = sds((N_CANDIDATES,), I32)
+            return {"batch": b}
+        return {"batch": self._batch(cfg, m["batch"], m["kind"] == "train")}
+
+    def input_specs(self, cfg, shape: str, rules) -> dict:
+        m = SHAPES[shape]
+        row = rules.spec("batch")
+        mat = rules.spec("batch", None)
+        if m["kind"] == "retrieval":
+            specs = {k: P() for k in self._batch(cfg, 1, train=False)}
+            specs["candidates"] = rules.spec("batch")  # candidate axis sharded
+            return {"batch": specs}
+        b = self._batch(cfg, m["batch"], m["kind"] == "train")
+        specs = {}
+        for k, v in b.items():
+            specs[k] = mat if len(v.shape) == 2 else row
+        return {"batch": specs}
+
+    def make_step(self, cfg, kind: str, rules):
+        if kind == "train":
+            return self.train_wrapper(recsys.loss_fn, cfg, rules)
+        if kind == "serve":
+            def serve_step(params, batch):
+                return recsys.serve(params, batch, cfg, rules)
+            return serve_step
+        if kind == "retrieval":
+            def retrieval_step(params, batch):
+                return recsys.retrieval_scores(params, batch, cfg, rules, k=100)
+            return retrieval_step
+        raise ValueError(kind)

@@ -1,0 +1,155 @@
+"""wtbc: the paper's own system as a dry-run architecture.
+
+Production deployment posture (DESIGN.md §4): a 2-billion-token collection
+(~10 GB of text — 10x the paper's corpus) document-sharded over every chip of
+the mesh; each shard holds a 4M-token WTBC (+ DRB bitmaps) built with the
+*global* (s,c)-DC model; a batch of 64 queries is replicated, solved locally,
+and merged with one all-gather of (B, k) scores per shard.
+
+The dry-run lowers the full `distributed_topk` (shard_map + per-shard
+Algorithm-1 while_loop + all_gather merge) for the four query methods.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchDef, Cell, sds, F32, I32
+from repro.core import distributed as D
+from repro.core import scoring
+from repro.core.bitvec import BitVec, WORDS_PER_BLOCK
+from repro.core.bytemap import ByteMap
+from repro.core.drb import DRBAux
+from repro.core.wtbc import MAX_LEVELS, WTBCIndex
+
+U8 = jnp.uint8
+U32 = jnp.uint32
+
+
+@dataclasses.dataclass(frozen=True)
+class WTBCDeployConfig:
+    name: str = "wtbc"
+    tokens_per_shard: int = 4_194_304      # 128 blocks of 32768
+    docs_per_shard: int = 6750
+    vocab: int = 718_691                   # the paper's ALL-corpus vocabulary
+    s: int = 188
+    c: int = 68
+    block: int = 32768
+    query_batch: int = 64
+    words_per_query: int = 4
+    k: int = 10
+    # level-size ratios observed on Zipf corpora with (188,68) codes
+    level1_frac: float = 0.5
+    level2_frac: float = 0.125
+
+
+SHAPES = {
+    "queries_dr_and": "dr-and",
+    "queries_dr_or": "dr-or",
+    "queries_drb_and": "drb-and",
+    "queries_drb_or": "drb-or",
+}
+
+
+def _abstract_bytemap(n: int, block: int, n_shards: int) -> ByteMap:
+    n_pad = max(1, -(-n // block)) * block
+    return ByteMap(
+        data=sds((n_shards, n_pad), U8),
+        counts=sds((n_shards, n_pad // block + 1, 256), jnp.int32),
+        length=sds((n_shards,), jnp.int32),
+        block=block)
+
+
+def abstract_sharded(cfg: WTBCDeployConfig, n_shards: int) -> D.ShardedWTBC:
+    n, V, D_ = cfg.tokens_per_shard, cfg.vocab, cfg.docs_per_shard
+    lvl_sizes = [n, int(n * cfg.level1_frac), int(n * cfg.level2_frac)]
+    levels = tuple(_abstract_bytemap(s, cfg.block, n_shards) for s in lvl_sizes)
+    offsets = (sds((n_shards, 2), jnp.int32),
+               sds((n_shards, cfg.c + 1), jnp.int32),
+               sds((n_shards, cfg.c ** 2 + 1), jnp.int32))
+    i32v = lambda *shape: sds((n_shards,) + shape, jnp.int32)
+    idx = WTBCIndex(
+        levels=levels, offsets=offsets,
+        cw=sds((n_shards, V, MAX_LEVELS), U8), cw_len=i32v(V),
+        node_off=i32v(V, MAX_LEVELS), base_rank=i32v(V, MAX_LEVELS),
+        sep_pos=i32v(D_), df=i32v(V), occ=i32v(V), doc_len=i32v(D_),
+        n=sds((n_shards,), jnp.int32), n_docs=sds((n_shards,), jnp.int32),
+        s=cfg.s, c=cfg.c)
+    n_bits = n
+    n_words = -(-n_bits // 32)
+    n_words = -(-n_words // WORDS_PER_BLOCK) * WORDS_PER_BLOCK
+    aux = DRBAux(
+        bv=BitVec(words=sds((n_shards, n_words), U32),
+                  counts=sds((n_shards, n_words // WORDS_PER_BLOCK + 1), jnp.int32),
+                  n_bits=sds((n_shards,), jnp.int32)),
+        bit_off=i32v(V + 1), has_bm=sds((n_shards, V), jnp.bool_), eps=1e-6)
+    return D.ShardedWTBC(idx=idx, aux=aux, doc_base=i32v(),
+                         global_idf=sds((V,), F32),        # replicated
+                         global_avg_dl=sds((), F32),       # replicated
+                         n_shards=n_shards)
+
+
+class WTBCPaperArch(ArchDef):
+    """family='retrieval' — handled specially by dryrun (needs the mesh)."""
+    family = "retrieval"
+    name = "wtbc"
+
+    def config(self, smoke: bool = False) -> WTBCDeployConfig:
+        if smoke:
+            return WTBCDeployConfig(name="wtbc-smoke", tokens_per_shard=8192,
+                                    docs_per_shard=64, vocab=500, s=254, c=2,
+                                    block=512, query_batch=2, k=5)
+        return WTBCDeployConfig()
+
+    def cells(self) -> list[Cell]:
+        return [Cell("wtbc", s, "serve") for s in SHAPES]
+
+    def init_params(self, key, cfg):
+        raise NotImplementedError("the WTBC index is built, not initialized")
+
+    def param_specs(self, cfg, rules):
+        raise NotImplementedError
+
+    def abstract_inputs(self, cfg, shape: str) -> dict:
+        B, Q = cfg.query_batch, cfg.words_per_query
+        return {"words": sds((B, Q), I32), "wmask": sds((B, Q), jnp.bool_)}
+
+    def input_specs(self, cfg, shape: str, rules) -> dict:
+        return {"words": P(), "wmask": P()}
+
+    def make_step(self, cfg, kind: str, rules):
+        raise NotImplementedError("use make_query_fn(mesh, ...)")
+
+    def make_query_fn(self, cfg: WTBCDeployConfig, shape: str, mesh,
+                      shard_axes):
+        method = SHAPES[shape]
+        heap_cap = 2 * cfg.docs_per_shard + 4
+
+        def query(sharded, words, wmask):
+            return D.distributed_topk(
+                sharded, words, wmask, k=cfg.k, method=method, mesh=mesh,
+                shard_axes=shard_axes, heap_cap=heap_cap,
+                max_df_cap=min(cfg.docs_per_shard, 2048))
+        return query
+
+    def sharded_specs(self, sharded_abs: D.ShardedWTBC,
+                      shard_axes: tuple[str, ...]):
+        """jit-level in_shardings: every stacked leaf sharded on axis 0 over
+        all shard mesh axes jointly."""
+        def leaf(l):
+            return P(shard_axes, *([None] * (len(l.shape) - 1)))
+        return D.ShardedWTBC(
+            idx=jax.tree.map(leaf, sharded_abs.idx),
+            aux=jax.tree.map(leaf, sharded_abs.aux),
+            doc_base=P(shard_axes),
+            global_idf=P(),
+            global_avg_dl=P(),
+            n_shards=sharded_abs.n_shards)
+
+
+ARCH = WTBCPaperArch()

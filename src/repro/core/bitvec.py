@@ -1,0 +1,108 @@
+"""Packed bit vectors with O(1)-amortized rank1/select1 (paper's [16] Munro).
+
+Used by WTBC-DRB for the per-word term-frequency bitmaps
+(``1 0^{tf1-1} 1 0^{tf2-1} ...``).  Layout: LSB-first bits in uint32 words,
+cumulative popcount counters every ``WORDS_PER_BLOCK`` words (1024 bits =>
+int32 counters cost 3.1% of the bit data).  ``lax.population_count`` maps to
+the TPU VPU popcount.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+WORDS_PER_BLOCK = 32  # 1024 bits per counter block
+
+
+class BitVec(NamedTuple):
+    words: jnp.ndarray   # (n_words,) uint32  (padded to block multiple)
+    counts: jnp.ndarray  # (n_blocks + 1,) int32 cumulative ones
+    n_bits: jnp.ndarray  # () int32
+
+
+def build(set_bits: np.ndarray, n_bits: int) -> BitVec:
+    """Host-side: construct from sorted positions of the set bits."""
+    n_words = max(1, -(-n_bits // 32))
+    n_blocks = -(-n_words // WORDS_PER_BLOCK)
+    n_words = n_blocks * WORDS_PER_BLOCK
+    words = np.zeros(n_words, dtype=np.uint32)
+    set_bits = np.asarray(set_bits, dtype=np.int64)
+    np.bitwise_or.at(words, set_bits // 32, np.uint32(1) << (set_bits % 32).astype(np.uint32))
+    ones_per_word = np.zeros(n_words, dtype=np.int64)
+    # popcount via unpackbits on the byte view (host-side build only)
+    byte_view = words.view(np.uint8).reshape(n_words, 4)
+    ones_per_word = np.unpackbits(byte_view, axis=1).sum(axis=1)
+    blocks = ones_per_word.reshape(n_blocks, WORDS_PER_BLOCK).sum(axis=1)
+    counts = np.zeros(n_blocks + 1, dtype=np.int64)
+    np.cumsum(blocks, out=counts[1:])
+    assert counts[-1] == len(set_bits)
+    return BitVec(
+        words=jnp.asarray(words),
+        counts=jnp.asarray(counts.astype(np.int32)),
+        n_bits=jnp.int32(n_bits),
+    )
+
+
+def _masked_popcount(w: jnp.ndarray, n_valid: jnp.ndarray) -> jnp.ndarray:
+    """popcount of the lowest ``n_valid`` bits of each uint32 (n_valid in [0,32])."""
+    n_valid = jnp.clip(n_valid, 0, 32)
+    full = jnp.uint32(0xFFFFFFFF)
+    mask = jnp.where(n_valid >= 32, full,
+                     (jnp.uint32(1) << n_valid.astype(jnp.uint32)) - jnp.uint32(1))
+    return jax.lax.population_count(w & mask).astype(jnp.int32)
+
+
+def rank1(bv: BitVec, pos: jnp.ndarray) -> jnp.ndarray:
+    """Number of set bits in [0, pos)."""
+    pos = jnp.clip(pos, 0, bv.n_bits).astype(jnp.int32)
+    blk = pos // (WORDS_PER_BLOCK * 32)
+    base = bv.counts[blk]
+    chunk = jax.lax.dynamic_slice_in_dim(bv.words, blk * WORDS_PER_BLOCK, WORDS_PER_BLOCK)
+    start_bit = blk * WORDS_PER_BLOCK * 32
+    n_valid = pos - start_bit - jnp.arange(WORDS_PER_BLOCK, dtype=jnp.int32) * 32
+    return base + jnp.sum(_masked_popcount(chunk, n_valid))
+
+
+def select1(bv: BitVec, j: jnp.ndarray) -> jnp.ndarray:
+    """Position of the j-th (1-based) set bit; n_bits if out of range."""
+    j = j.astype(jnp.int32)
+    total = bv.counts[-1]
+    n_blocks = bv.counts.shape[0] - 1
+
+    # block search: largest blk with counts[blk] < j
+    def body(_, lohi):
+        lo, hi = lohi
+        mid = (lo + hi + 1) // 2
+        right = bv.counts[mid] < j
+        return jnp.where(right, mid, lo), jnp.where(right, hi, mid - 1)
+
+    n_iter = max(1, int(np.ceil(np.log2(max(n_blocks, 2)))) + 1)
+    blk, _ = jax.lax.fori_loop(0, n_iter, body, (jnp.int32(0), jnp.int32(n_blocks - 1)))
+
+    chunk = jax.lax.dynamic_slice_in_dim(bv.words, blk * WORDS_PER_BLOCK, WORDS_PER_BLOCK)
+    pc = jax.lax.population_count(chunk).astype(jnp.int32)
+    cum = jnp.cumsum(pc)
+    need = j - bv.counts[blk]
+    word_i = jnp.searchsorted(cum, need, side="left").astype(jnp.int32)
+    prior = jnp.where(word_i > 0, cum[jnp.maximum(word_i - 1, 0)], 0)
+    w = chunk[jnp.clip(word_i, 0, WORDS_PER_BLOCK - 1)]
+    # j-th set bit inside w, with j' = need - prior (1-based)
+    bits = ((w >> jnp.arange(32, dtype=jnp.uint32)) & jnp.uint32(1)).astype(jnp.int32)
+    bit_cum = jnp.cumsum(bits)
+    bit_i = jnp.searchsorted(bit_cum, need - prior, side="left").astype(jnp.int32)
+    pos = (blk * WORDS_PER_BLOCK + word_i) * 32 + bit_i
+    return jnp.where((j >= 1) & (j <= total), pos, bv.n_bits).astype(jnp.int32)
+
+
+# numpy oracles ---------------------------------------------------------------
+
+def rank1_np(set_bits: np.ndarray, pos: int) -> int:
+    return int(np.count_nonzero(np.asarray(set_bits) < pos))
+
+
+def select1_np(set_bits: np.ndarray, j: int, n_bits: int) -> int:
+    sb = np.sort(np.asarray(set_bits))
+    return int(sb[j - 1]) if 1 <= j <= len(sb) else n_bits

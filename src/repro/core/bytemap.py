@@ -1,0 +1,179 @@
+"""rank/select/count over byte sequences — the WTBC's core primitive.
+
+The paper keeps *partial counters* per bytemap so that ``rank_b(B, i)`` /
+``select_b(B, i)`` run in microseconds at ~3% space overhead.  TPU-native
+realization (see DESIGN.md §2):
+
+* one cumulative count matrix ``counts[(n_blocks+1), 256] int32`` sampled every
+  ``block`` bytes (``block = 32768`` reproduces the paper's 3% overhead at
+  int32 counters; tests use smaller blocks),
+* the in-block residual is a masked compare-and-sum over a single block that
+  lives in VMEM on TPU — the ``kernels/byte_rank`` Pallas kernel fuses the
+  counter gather with that reduce; this module is the pure-jnp reference path
+  (also used directly on CPU),
+* ``select`` is a binary search over one counter column plus an in-block
+  prefix scan — no extra space beyond the same counters.
+
+Build is numpy (host), queries are jit/vmap-friendly jnp.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+DEFAULT_BLOCK = 4096  # bytes per counter block (power of two)
+
+
+@partial(jax.tree_util.register_dataclass,
+         data_fields=("data", "counts", "length"), meta_fields=("block",))
+@dataclasses.dataclass(frozen=True)
+class ByteMap:
+    """A byte sequence + rank/select acceleration counters.
+
+    The stored array is zero-padded to a multiple of ``block``; ``length`` is
+    the logical length.  ``counts[k, v]`` = occurrences of byte ``v`` in
+    ``data[0 : k*block]`` (exclusive prefix).  ``block`` is static metadata.
+    """
+
+    data: jnp.ndarray    # (padded_n,) uint8
+    counts: jnp.ndarray  # (n_blocks + 1, 256) int32 cumulative
+    length: jnp.ndarray  # () int32
+    block: int           # static
+
+    @property
+    def n_blocks(self) -> int:
+        return self.counts.shape[0] - 1
+
+
+def build(data: np.ndarray, block: int = DEFAULT_BLOCK) -> ByteMap:
+    """Host-side construction of the counter structure."""
+    data = np.ascontiguousarray(data, dtype=np.uint8)
+    n = len(data)
+    n_blocks = max(1, -(-n // block))
+    padded = np.zeros(n_blocks * block, dtype=np.uint8)
+    padded[:n] = data
+    # per-block histograms -> exclusive cumulative sums (single vectorized pass)
+    flat_keys = (np.arange(n_blocks * block, dtype=np.int64) // block) * 256 + padded
+    hist = np.bincount(flat_keys, minlength=n_blocks * 256).reshape(n_blocks, 256)
+    # padding bytes are zeros; remove them from the last block's histogram so
+    # counters reflect the logical sequence only
+    hist[-1, 0] -= n_blocks * block - n
+    counts = np.zeros((n_blocks + 1, 256), dtype=np.int64)
+    np.cumsum(hist, axis=0, out=counts[1:])
+    if counts.max() >= 2**31:
+        raise ValueError("sequence too long for int32 counters")
+    return ByteMap(
+        data=jnp.asarray(padded),
+        counts=jnp.asarray(counts.astype(np.int32)),
+        length=jnp.int32(n),
+        block=block,
+    )
+
+
+# ---------------------------------------------------------------------------
+# rank / count
+# ---------------------------------------------------------------------------
+
+def rank(bm: ByteMap, byte: jnp.ndarray, pos: jnp.ndarray) -> jnp.ndarray:
+    """occurrences of ``byte`` in ``data[0:pos]`` (pos in [0, length]).
+
+    The in-block residual uses a hierarchical scan (512-byte sub-chunks) so
+    the index/mask vectors are (block/512,) + (512,) instead of a full
+    block-length int32 iota — 4x less traffic at block=32768 (§Perf)."""
+    pos = jnp.clip(pos, 0, bm.length)
+    blk = pos // bm.block
+    base = bm.counts[blk, byte]
+    chunk = jax.lax.dynamic_slice_in_dim(bm.data, blk * bm.block, bm.block)
+    off = pos - blk * bm.block
+    sub = 512 if bm.block >= 512 else bm.block
+    n_sub = bm.block // sub
+    hits2d = chunk.reshape(n_sub, sub) == byte.astype(jnp.uint8)
+    per_sub = jnp.sum(hits2d, axis=1, dtype=jnp.int32)
+    sub_i = off // sub
+    full = jnp.sum(jnp.where(jnp.arange(n_sub, dtype=jnp.int32) < sub_i,
+                             per_sub, 0), dtype=jnp.int32)
+    subchunk = jax.lax.dynamic_slice_in_dim(
+        chunk, jnp.clip(sub_i, 0, n_sub - 1) * sub, sub)
+    partial = jnp.sum((subchunk == byte.astype(jnp.uint8))
+                      & (jnp.arange(sub, dtype=jnp.int32) < off - sub_i * sub),
+                      dtype=jnp.int32)
+    return base + full + partial
+
+
+def rank_block_base(bm: ByteMap, byte: jnp.ndarray, pos: jnp.ndarray) -> jnp.ndarray:
+    """Counter-only part of rank (used by callers that fuse the residual)."""
+    blk = jnp.clip(pos, 0, bm.length) // bm.block
+    return bm.counts[blk, byte]
+
+
+def count_range(bm: ByteMap, byte: jnp.ndarray, lo: jnp.ndarray, hi: jnp.ndarray) -> jnp.ndarray:
+    """occurrences of ``byte`` in ``data[lo:hi]``."""
+    return rank(bm, byte, hi) - rank(bm, byte, lo)
+
+
+# ---------------------------------------------------------------------------
+# select
+# ---------------------------------------------------------------------------
+
+def select(bm: ByteMap, byte: jnp.ndarray, j: jnp.ndarray) -> jnp.ndarray:
+    """Position of the ``j``-th (1-based) occurrence of ``byte``; length if absent.
+
+    Binary search the counter column for the block containing the j-th
+    occurrence, then prefix-scan that block.  O(log n_blocks) gathers + one
+    block scan, the same acceleration the paper gets from partial counters.
+    """
+    j = j.astype(jnp.int32)
+    col_total = bm.counts[-1, byte]
+
+    # largest blk with counts[blk, byte] < j  ->  binary search on the column.
+    def body(_, lohi):
+        lo, hi = lohi
+        mid = (lo + hi + 1) // 2
+        go_right = bm.counts[mid, byte] < j
+        return jnp.where(go_right, mid, lo), jnp.where(go_right, hi, mid - 1)
+
+    n_blocks = bm.counts.shape[0] - 1
+    n_iter = max(1, int(np.ceil(np.log2(max(n_blocks, 2)))) + 1)
+    lo, _ = jax.lax.fori_loop(0, n_iter, body, (jnp.int32(0), jnp.int32(n_blocks - 1)))
+
+    base = bm.counts[lo, byte]
+    chunk = jax.lax.dynamic_slice_in_dim(bm.data, lo * bm.block, bm.block)
+    need = j - base
+    # hierarchical in-block scan: a flat int32 cumsum over a 32 KB block costs
+    # 4x the block in write traffic; instead reduce 512-byte sub-chunks to a
+    # (block/512,) count vector, pick the sub-chunk, and scan only 512 bytes
+    # (§Perf hillclimb 3 — same trick a TPU kernel would do in VMEM).
+    sub = 512 if bm.block >= 512 else bm.block
+    n_sub = bm.block // sub
+    hits2d = (chunk.reshape(n_sub, sub) == byte.astype(jnp.uint8))
+    per_sub = jnp.cumsum(jnp.sum(hits2d, axis=1, dtype=jnp.int32))
+    sub_i = jnp.searchsorted(per_sub, need, side="left").astype(jnp.int32)
+    prior = jnp.where(sub_i > 0, per_sub[jnp.maximum(sub_i - 1, 0)], 0)
+    subchunk = jax.lax.dynamic_slice_in_dim(
+        chunk, jnp.clip(sub_i, 0, n_sub - 1) * sub, sub)
+    cums = jnp.cumsum((subchunk == byte.astype(jnp.uint8)).astype(jnp.int32))
+    idx = jnp.searchsorted(cums, need - prior, side="left")
+    pos = lo * bm.block + jnp.clip(sub_i, 0, n_sub - 1) * sub + idx
+    return jnp.where((j >= 1) & (j <= col_total), pos, bm.length).astype(jnp.int32)
+
+
+def access(bm: ByteMap, pos: jnp.ndarray) -> jnp.ndarray:
+    """data[pos] (uint8)."""
+    return bm.data[jnp.clip(pos, 0, bm.length - 1)]
+
+
+# ---------------------------------------------------------------------------
+# numpy oracles (used by tests and the ref.py kernel oracles)
+# ---------------------------------------------------------------------------
+
+def rank_np(data: np.ndarray, byte: int, pos: int) -> int:
+    return int(np.count_nonzero(data[:pos] == byte))
+
+
+def select_np(data: np.ndarray, byte: int, j: int) -> int:
+    occ = np.flatnonzero(data == byte)
+    return int(occ[j - 1]) if 1 <= j <= len(occ) else len(data)

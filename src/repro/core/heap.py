@@ -1,0 +1,132 @@
+"""Fixed-capacity array binary heaps, jit-compatible (lax.while_loop sifts).
+
+Algorithm 1 of the paper is driven by a priority queue of text segments.  A
+pointer-based heap does not exist in JAX-land; we use the classical implicit
+binary heap over a pre-allocated score array plus an int32 payload matrix.
+Pushes/pops are O(log cap) with dynamic index updates — the whole retrieval
+loop stays on-device with no host round trips.
+
+All operations take and return the state tuple ``(scores, payload, size)``:
+  scores  (cap,)   float32, max-heap ordered prefix [0, size)
+  payload (cap, P) int32
+  size    ()       int32
+
+``enable`` flags make pushes/pops conditional without ``lax.cond`` branches on
+the large state (disabled ops are no-ops with the same cost).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = jnp.float32(-jnp.inf)
+
+
+class Heap(NamedTuple):
+    scores: jnp.ndarray   # (cap,) float32
+    payload: jnp.ndarray  # (cap, P) int32
+    size: jnp.ndarray     # () int32
+
+    @property
+    def cap(self) -> int:
+        return self.scores.shape[0]
+
+
+def make(cap: int, payload_width: int) -> Heap:
+    return Heap(
+        scores=jnp.full((cap,), NEG_INF, dtype=jnp.float32),
+        payload=jnp.zeros((cap, payload_width), dtype=jnp.int32),
+        size=jnp.int32(0),
+    )
+
+
+def push(h: Heap, score: jnp.ndarray, pay: jnp.ndarray,
+         enable: jnp.ndarray | bool = True) -> Heap:
+    """Insert (score, pay); no-op when ``enable`` is False or heap is full."""
+    enable = jnp.asarray(enable) & (h.size < h.cap)
+    scores, payload, size = h
+    at = jnp.where(enable, size, jnp.int32(0))
+    scores = scores.at[at].set(jnp.where(enable, score, scores[at]))
+    payload = payload.at[at].set(jnp.where(enable, pay, payload[at]))
+
+    def cond(st):
+        i, sc, _ = st
+        par = (i - 1) // 2
+        return (i > 0) & (sc[par] < sc[i])
+
+    def body(st):
+        i, sc, pl = st
+        par = (i - 1) // 2
+        si, sp = sc[i], sc[par]
+        sc = sc.at[i].set(sp).at[par].set(si)
+        pi, pp = pl[i], pl[par]
+        pl = pl.at[i].set(pp).at[par].set(pi)
+        return par, sc, pl
+
+    i0 = jnp.where(enable, size, jnp.int32(0))
+    _, scores, payload = jax.lax.while_loop(cond, body, (i0, scores, payload))
+    return Heap(scores, payload, size + enable.astype(jnp.int32))
+
+
+def pop(h: Heap) -> tuple[jnp.ndarray, jnp.ndarray, Heap]:
+    """Remove and return the max element.  Caller guards ``size > 0``."""
+    scores, payload, size = h
+    top_s, top_p = scores[0], payload[0]
+    last = jnp.maximum(size - 1, 0)
+    scores = scores.at[0].set(scores[last]).at[last].set(NEG_INF)
+    payload = payload.at[0].set(payload[last])
+    size = last
+
+    def cond(st):
+        i, sc, _ = st
+        l, r = 2 * i + 1, 2 * i + 2
+        ls = jnp.where(l < size, sc[l], NEG_INF)
+        rs = jnp.where(r < size, sc[r], NEG_INF)
+        return jnp.maximum(ls, rs) > sc[i]
+
+    def body(st):
+        i, sc, pl = st
+        l, r = 2 * i + 1, 2 * i + 2
+        ls = jnp.where(l < size, sc[l], NEG_INF)
+        rs = jnp.where(r < size, sc[r], NEG_INF)
+        c = jnp.where(rs > ls, r, l)
+        si, scc = sc[i], sc[c]
+        sc = sc.at[i].set(scc).at[c].set(si)
+        pi, pc = pl[i], pl[c]
+        pl = pl.at[i].set(pc).at[c].set(pi)
+        return c, sc, pl
+
+    _, scores, payload = jax.lax.while_loop(cond, body, (jnp.int32(0), scores, payload))
+    return top_s, top_p, Heap(scores, payload, size)
+
+
+# ---------------------------------------------------------------------------
+# bounded top-k result set (k is tiny: argmin replace beats a heap on VPU)
+# ---------------------------------------------------------------------------
+
+class TopK(NamedTuple):
+    scores: jnp.ndarray  # (k,) float32, -inf padded
+    docs: jnp.ndarray    # (k,) int32
+
+
+def topk_make(k: int) -> TopK:
+    return TopK(jnp.full((k,), NEG_INF, jnp.float32), jnp.full((k,), -1, jnp.int32))
+
+
+def topk_insert(t: TopK, score: jnp.ndarray, doc: jnp.ndarray,
+                enable: jnp.ndarray | bool = True) -> TopK:
+    """Keep the k best (score, doc) pairs; ties broken toward lower doc id."""
+    worst = jnp.argmin(t.scores)
+    better = jnp.asarray(enable) & (score > t.scores[worst])
+    return TopK(
+        scores=t.scores.at[worst].set(jnp.where(better, score, t.scores[worst])),
+        docs=t.docs.at[worst].set(jnp.where(better, doc, t.docs[worst])),
+    )
+
+
+def topk_sorted(t: TopK) -> TopK:
+    """Descending by score; ties by ascending doc id (deterministic output)."""
+    order = jnp.lexsort((t.docs, -t.scores))
+    return TopK(t.scores[order], t.docs[order])

@@ -1,0 +1,159 @@
+"""WTBC-DR: ranked retrieval with *no extra space* (paper §3.1, Algorithm 1).
+
+Best-first search over segments (concatenations of consecutive documents),
+driven by a priority queue keyed on segment tf-idf.  The whole collection is
+the initial segment; popped multi-document segments are split at the document
+boundary nearest their middle; a popped single-document segment is the next
+most relevant answer (tf-idf is monotone over concatenation).  Conjunctive
+(AND) queries additionally discard any segment in which some query word has
+tf = 0.
+
+Faithfulness + two deliberate deviations (DESIGN.md §2):
+
+* Segments are document ranges ``[d0, d1)`` rather than byte ranges; the
+  midpoint-'$' search ``select_$(T, rank_$(T, (a+b)/2))`` collapses to integer
+  arithmetic on the separator-position array — the paper's own footnote-2
+  "faster structure for select_$".
+* The paper stores one score per segment and derives the sibling score by
+  *float* subtraction.  We store the integer tf vector in the heap payload:
+  the sibling's tf is obtained by exact integer subtraction (same saving — one
+  ``count_range`` per split, not two) and its score is recomputed from tf, so
+  scores carry no accumulated float error and conjunctive emptiness checks
+  (tf == 0) are exact.
+
+The full search is one jitted ``lax.while_loop``; batched queries via ``vmap``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import heap as H
+from repro.core import wtbc
+from repro.core.wtbc import WTBCIndex
+
+
+class DRResult(NamedTuple):
+    docs: jnp.ndarray    # (k,) int32, -1 padded, sorted by descending score
+    scores: jnp.ndarray  # (k,) float32, -inf padded
+    n_found: jnp.ndarray # () int32
+    iters: jnp.ndarray   # () int32 — pops performed (work metric for §Perf)
+
+
+def count_words_range(idx: WTBCIndex, words: jnp.ndarray,
+                      lo: jnp.ndarray, hi: jnp.ndarray) -> jnp.ndarray:
+    """tf of each query word in root range [lo, hi); (Q,) int32."""
+    return jax.vmap(lambda w: wtbc.count_range(idx, w, lo, hi))(words)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("k", "conjunctive", "heap_cap", "max_pops"))
+def topk_dr(idx: WTBCIndex, words: jnp.ndarray, wmask: jnp.ndarray,
+            idf: jnp.ndarray, *, k: int, conjunctive: bool,
+            heap_cap: int, max_pops: int | None = None) -> DRResult:
+    """Algorithm 1.  ``words`` (Q,) word-ranks, ``wmask`` (Q,) valid-word mask,
+    ``idf`` (V,) precomputed idf table.  ``heap_cap`` >= 2*n_docs + 2 makes the
+    search exact (the implicit split tree has < 2*n_docs nodes).
+
+    ``max_pops`` is the any-time budget (straggler mitigation, DESIGN.md §4):
+    the search stops after that many queue pops and returns the documents
+    emitted so far — every emitted document is still exactly ranked."""
+    Q = words.shape[0]
+    idf_w = jnp.where(wmask, idf[words], 0.0).astype(jnp.float32)
+
+    def seg_score(tf):
+        return jnp.dot(tf.astype(jnp.float32), idf_w)
+
+    def seg_valid(tf, score):
+        if conjunctive:
+            return jnp.all((tf > 0) | ~wmask) & jnp.any(wmask)
+        return score > 0.0
+
+    n_docs = idx.n_docs
+    lo0, hi0 = wtbc.segment_extent(idx, jnp.int32(0), n_docs)
+    tf0 = count_words_range(idx, words, lo0, hi0) * wmask
+    score0 = seg_score(tf0)
+    pay0 = jnp.concatenate([jnp.stack([jnp.int32(0), n_docs]), tf0])
+    hp = H.make(heap_cap, 2 + Q)
+    hp = H.push(hp, score0, pay0, seg_valid(tf0, score0))
+
+    out = H.topk_make(k)
+    # emission order is already globally sorted; track an explicit write cursor
+    out_docs = jnp.full((k,), -1, jnp.int32)
+    out_scores = jnp.full((k,), -jnp.inf, jnp.float32)
+
+    def cond(st):
+        hp, _, _, n_out, it = st
+        ok = (n_out < k) & (hp.size > 0)
+        if max_pops is not None:
+            ok = ok & (it < max_pops)
+        return ok
+
+    def body(st):
+        hp, out_docs, out_scores, n_out, it = st
+        score, pay, hp = H.pop(hp)
+        d0, d1 = pay[0], pay[1]
+        tf = pay[2:]
+        single = (d1 - d0) == 1
+
+        # emit when single
+        at = jnp.where(single, n_out, jnp.int32(0))
+        out_docs = out_docs.at[at].set(jnp.where(single, d0, out_docs[at]))
+        out_scores = out_scores.at[at].set(jnp.where(single, score, out_scores[at]))
+        n_out = n_out + single.astype(jnp.int32)
+
+        # split when not single (degenerate math is masked out by `enable`s)
+        mid = (d0 + d1) // 2
+        lo1, hi1 = wtbc.segment_extent(idx, d0, mid)
+        tf1 = count_words_range(idx, words, lo1, hi1) * wmask
+        tf2 = tf - tf1
+        s1, s2 = seg_score(tf1), seg_score(tf2)
+        pay1 = jnp.concatenate([jnp.stack([d0, mid]), tf1])
+        pay2 = jnp.concatenate([jnp.stack([mid, d1]), tf2])
+        hp = H.push(hp, s1, pay1, ~single & seg_valid(tf1, s1))
+        hp = H.push(hp, s2, pay2, ~single & seg_valid(tf2, s2))
+        return hp, out_docs, out_scores, n_out, it + 1
+
+    hp, out_docs, out_scores, n_out, iters = jax.lax.while_loop(
+        cond, body, (hp, out_docs, out_scores, jnp.int32(0), jnp.int32(0)))
+    return DRResult(out_docs, out_scores, n_out, iters)
+
+
+def topk_dr_batch(idx: WTBCIndex, words: jnp.ndarray, wmask: jnp.ndarray,
+                  idf: jnp.ndarray, *, k: int, conjunctive: bool,
+                  heap_cap: int) -> DRResult:
+    """Batched queries: ``words``/``wmask`` are (B, Q)."""
+    fn = functools.partial(topk_dr, k=k, conjunctive=conjunctive, heap_cap=heap_cap)
+    return jax.vmap(lambda w, m: fn(idx, w, m, idf))(words, wmask)
+
+
+# ---------------------------------------------------------------------------
+# brute-force oracle (tests + benchmark ground truth)
+# ---------------------------------------------------------------------------
+
+def topk_bruteforce(idx: WTBCIndex, words, wmask, idf, *, k: int,
+                    conjunctive: bool) -> DRResult:
+    """Score every document directly with count_range — O(N*Q) oracle."""
+    n_docs = int(idx.n_docs)
+    words = jnp.asarray(words)
+    wmask = jnp.asarray(wmask)
+    idf_w = jnp.where(wmask, idf[words], 0.0)
+
+    def score_doc(d):
+        lo, hi = wtbc.segment_extent(idx, d, d + 1)
+        tf = count_words_range(idx, words, lo, hi) * wmask
+        s = jnp.dot(tf.astype(jnp.float32), idf_w)
+        if conjunctive:
+            ok = jnp.all((tf > 0) | ~wmask) & jnp.any(wmask)
+        else:
+            ok = s > 0
+        return jnp.where(ok, s, -jnp.inf)
+
+    scores = jax.lax.map(score_doc, jnp.arange(n_docs, dtype=jnp.int32))
+    top_s, top_d = jax.lax.top_k(scores, k)
+    found = jnp.sum(top_s > -jnp.inf).astype(jnp.int32)
+    top_d = jnp.where(top_s > -jnp.inf, top_d, -1)
+    return DRResult(top_d.astype(jnp.int32), top_s, found, jnp.int32(n_docs))

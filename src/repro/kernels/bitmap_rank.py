@@ -1,0 +1,66 @@
+"""Pallas TPU kernel: batched rank1 over packed tf bitmaps (WTBC-DRB).
+
+DRB's triplet recomputation performs one ``rank1`` per query word per
+candidate document; bag-of-words enumeration performs two ``select1`` per
+document (each of which is block-search + one in-block rank).  The in-block
+work is pure popcount: ``lax.population_count`` maps to the VPU.
+
+Same scalar-prefetch pattern as ``byte_rank``: one grid step per query, the
+(1, WORDS_PER_BLOCK) uint32 tile and the counter cell are DMA'd by index_map.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.bitvec import WORDS_PER_BLOCK
+
+
+def _kernel(blk_ref, pos_ref, words_ref, counts_ref, out_ref):
+    i = pl.program_id(0)
+    pos = pos_ref[i]
+    start_bit = blk_ref[i] * (WORDS_PER_BLOCK * 32)
+    lane = jax.lax.broadcasted_iota(jnp.int32, (1, WORDS_PER_BLOCK), 1)
+    n_valid = jnp.clip(pos - start_bit - lane * 32, 0, 32)
+    w = words_ref[...]
+    full = jnp.uint32(0xFFFFFFFF)
+    mask = jnp.where(n_valid >= 32, full,
+                     (jnp.uint32(1) << n_valid.astype(jnp.uint32)) - jnp.uint32(1))
+    pc = jax.lax.population_count(w & mask).astype(jnp.int32)
+    out_ref[0] = counts_ref[0] + jnp.sum(pc)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def bitmap_rank1(words: jnp.ndarray, counts: jnp.ndarray, n_bits: jnp.ndarray,
+                 pos_q: jnp.ndarray, *, interpret: bool = True) -> jnp.ndarray:
+    """Batched rank1: set bits among the first ``pos_q[i]`` bits.
+
+    words: (n_words,) uint32 (padded to WORDS_PER_BLOCK multiple);
+    counts: (n_blocks+1,) int32 cumulative ones;  pos_q: (B,).
+    """
+    n_blocks = counts.shape[0] - 1
+    tiles = words.reshape(n_blocks, WORDS_PER_BLOCK)
+    pos_q = jnp.clip(pos_q.astype(jnp.int32), 0, n_bits)
+    blk = pos_q // (WORDS_PER_BLOCK * 32)
+    B = pos_q.shape[0]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,                   # blk, pos
+        grid=(B,),
+        in_specs=[
+            pl.BlockSpec((1, WORDS_PER_BLOCK), lambda i, blk, pos: (blk[i], 0)),
+            pl.BlockSpec((1,), lambda i, blk, pos: (blk[i],)),
+        ],
+        out_specs=pl.BlockSpec((1,), lambda i, blk, pos: (i,)),
+    )
+    fn = pl.pallas_call(
+        _kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B,), jnp.int32),
+        interpret=interpret,
+    )
+    return fn(blk, pos_q, tiles, counts)

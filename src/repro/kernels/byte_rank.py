@@ -1,0 +1,71 @@
+"""Pallas TPU kernel: batched byte-rank over a counter-accelerated bytemap.
+
+``rank_b(B, i)`` is the single hottest operation in the WTBC (every count /
+locate / decode performs 2-6 of them; Algorithm 1 performs 2·Q per segment
+split).  The TPU-native shape of the operation (DESIGN.md §2):
+
+  rank_b(i) = counts[i // BLOCK, b]  +  popcount-style masked compare-reduce
+              over the single BLOCK-byte tile containing position i
+
+The kernel keeps that tile in VMEM and fuses the counter gather with the
+residual reduce.  Data-dependent tile selection uses **scalar prefetch**: the
+block index of every query is computed on the host side of the launch and fed
+to the BlockSpec index_map, so the Pallas pipeline DMA-gathers exactly one
+(1, BLOCK) tile of the byte array + one (1, 256) counter row per grid step.
+
+Grid: one step per query (queries are the batch axis of serving).  The
+compare-reduce over a 4-32KB tile is a handful of (8, 128) VPU ops; the DMA
+is the cost, and it is the minimum possible traffic for an exact rank.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(blk_ref, pos_ref, byte_ref, data_ref, counts_ref, out_ref, *, block: int):
+    i = pl.program_id(0)
+    pos = pos_ref[i]
+    byte = byte_ref[i]
+    base = counts_ref[0, byte]
+    off = pos - blk_ref[i] * block               # in-tile residual cutoff
+    lane = jax.lax.broadcasted_iota(jnp.int32, (1, block), 1)
+    hits = (data_ref[...] == byte.astype(jnp.uint8)) & (lane < off)
+    out_ref[0] = base + jnp.sum(hits.astype(jnp.int32))
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def byte_rank(data_padded: jnp.ndarray, counts: jnp.ndarray, length: jnp.ndarray,
+              bytes_q: jnp.ndarray, pos_q: jnp.ndarray, *, block: int,
+              interpret: bool = True) -> jnp.ndarray:
+    """Batched rank: occurrences of ``bytes_q[i]`` in ``data[: pos_q[i]]``.
+
+    data_padded: (n_blocks*block,) uint8;  counts: (n_blocks+1, 256) int32
+    cumulative;  bytes_q/pos_q: (B,).  Returns (B,) int32.
+    """
+    n_blocks = counts.shape[0] - 1
+    tiles = data_padded.reshape(n_blocks, block)
+    pos_q = jnp.clip(pos_q.astype(jnp.int32), 0, length)
+    blk = pos_q // block
+    B = pos_q.shape[0]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,                   # blk, pos, byte
+        grid=(B,),
+        in_specs=[
+            pl.BlockSpec((1, block), lambda i, blk, pos, byte: (blk[i], 0)),
+            pl.BlockSpec((1, 256), lambda i, blk, pos, byte: (blk[i], 0)),
+        ],
+        out_specs=pl.BlockSpec((1,), lambda i, blk, pos, byte: (i,)),
+    )
+    fn = pl.pallas_call(
+        functools.partial(_kernel, block=block),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B,), jnp.int32),
+        interpret=interpret,
+    )
+    return fn(blk, pos_q, bytes_q.astype(jnp.int32), tiles, counts)

@@ -1,0 +1,74 @@
+"""jit'd public wrappers for the Pallas kernels, with platform dispatch.
+
+On TPU the ``pl.pallas_call`` path runs compiled; everywhere else (this CPU
+container, unit tests) ``interpret=True`` executes the same kernel body in
+Python for exact validation, or the pure-jnp oracle is used directly.
+
+`use_kernels(False)` forces the oracle path (benchmark A/B switch).
+"""
+from __future__ import annotations
+
+import contextlib
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.bitvec import BitVec
+from repro.core.bytemap import ByteMap
+from repro.kernels import byte_rank as _byte_rank_k
+from repro.kernels import bitmap_rank as _bitmap_rank_k
+from repro.kernels import topk_score as _topk_score_k
+from repro.kernels import ref
+
+_STATE = {"enabled": True}
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@contextlib.contextmanager
+def use_kernels(enabled: bool):
+    prev = _STATE["enabled"]
+    _STATE["enabled"] = enabled
+    try:
+        yield
+    finally:
+        _STATE["enabled"] = prev
+
+
+def rank_batch(bm: ByteMap, bytes_q: jnp.ndarray, pos_q: jnp.ndarray) -> jnp.ndarray:
+    """Batched bytemap rank — kernel on TPU / interpret elsewhere."""
+    if _STATE["enabled"]:
+        return _byte_rank_k.byte_rank(bm.data, bm.counts, bm.length,
+                                      bytes_q, pos_q, block=bm.block,
+                                      interpret=not _on_tpu())
+    return ref.byte_rank_ref(bm.data, bm.counts, bm.length, bytes_q, pos_q,
+                             block=bm.block)
+
+
+def bitmap_rank1_batch(bv: BitVec, pos_q: jnp.ndarray) -> jnp.ndarray:
+    if _STATE["enabled"]:
+        return _bitmap_rank_k.bitmap_rank1(bv.words, bv.counts, bv.n_bits,
+                                           pos_q, interpret=not _on_tpu())
+    return ref.bitmap_rank1_ref(bv.words, bv.counts, bv.n_bits, pos_q)
+
+
+def scored_topk(cands: jnp.ndarray, query: jnp.ndarray, *, k: int,
+                tile: int = 1024) -> tuple[jnp.ndarray, jnp.ndarray]:
+    if _STATE["enabled"]:
+        return _topk_score_k.scored_topk(cands, query, k=k, tile=tile,
+                                         interpret=not _on_tpu())
+    return ref.scored_topk_ref(cands, query, k=k)
+
+
+def segment_tf_batch(bm: ByteMap, byte, bounds) -> "jnp.ndarray":
+    """Per-segment tf of one byte over sorted boundaries (kernel on TPU)."""
+    from repro.kernels import segment_tf as _seg
+    if _STATE["enabled"]:
+        return _seg.segment_tf(bm.data, bm.counts, bm.length, byte, bounds,
+                               block=bm.block, interpret=not _on_tpu())
+    r = ref.byte_rank_ref(bm.data, bm.counts, bm.length,
+                          jnp.full(bounds.shape, byte, jnp.int32),
+                          bounds, block=bm.block)
+    return r[1:] - r[:-1]

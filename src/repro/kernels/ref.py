@@ -1,0 +1,52 @@
+"""Pure-jnp oracles for every Pallas kernel (the ``ref.py`` contract).
+
+Tests sweep shapes/dtypes and assert_allclose kernel-vs-oracle; the oracles
+are also the CPU fallback paths used when kernels are disabled.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.bitvec import WORDS_PER_BLOCK
+
+
+def byte_rank_ref(data_padded: jnp.ndarray, counts: jnp.ndarray,
+                  length: jnp.ndarray, bytes_q: jnp.ndarray,
+                  pos_q: jnp.ndarray, *, block: int) -> jnp.ndarray:
+    """vmap'd counter-gather + masked count (mirrors bytemap.rank)."""
+    pos_q = jnp.clip(pos_q.astype(jnp.int32), 0, length)
+
+    def one(b, p):
+        blk = p // block
+        base = counts[blk, b]
+        chunk = jax.lax.dynamic_slice_in_dim(data_padded, blk * block, block)
+        mask = jnp.arange(block, dtype=jnp.int32) < (p - blk * block)
+        return base + jnp.sum((chunk == b.astype(jnp.uint8)) & mask, dtype=jnp.int32)
+
+    return jax.vmap(one)(bytes_q, pos_q)
+
+
+def bitmap_rank1_ref(words: jnp.ndarray, counts: jnp.ndarray,
+                     n_bits: jnp.ndarray, pos_q: jnp.ndarray) -> jnp.ndarray:
+    pos_q = jnp.clip(pos_q.astype(jnp.int32), 0, n_bits)
+
+    def one(p):
+        blk = p // (WORDS_PER_BLOCK * 32)
+        chunk = jax.lax.dynamic_slice_in_dim(words, blk * WORDS_PER_BLOCK,
+                                             WORDS_PER_BLOCK)
+        n_valid = jnp.clip(p - blk * WORDS_PER_BLOCK * 32
+                           - jnp.arange(WORDS_PER_BLOCK, dtype=jnp.int32) * 32, 0, 32)
+        full = jnp.uint32(0xFFFFFFFF)
+        mask = jnp.where(n_valid >= 32, full,
+                         (jnp.uint32(1) << n_valid.astype(jnp.uint32)) - jnp.uint32(1))
+        return counts[blk] + jnp.sum(
+            jax.lax.population_count(chunk & mask).astype(jnp.int32))
+
+    return jax.vmap(one)(pos_q)
+
+
+def scored_topk_ref(cands: jnp.ndarray, query: jnp.ndarray, *, k: int
+                    ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    scores = cands.astype(jnp.float32) @ query.astype(jnp.float32)
+    return jax.lax.top_k(scores, k)

@@ -1,0 +1,292 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede any jax import: jax locks the device count on first init.
+# The 512 placeholder host devices exist ONLY for this dry-run process.
+
+# Multi-pod dry-run: lower + compile every (architecture x input-shape) cell
+# on the production meshes, and record memory/cost/collective evidence.
+#
+#   PYTHONPATH=src python -m repro.launch.dryrun --mesh single          # 16x16
+#   PYTHONPATH=src python -m repro.launch.dryrun --mesh multi           # 2x16x16
+#   PYTHONPATH=src python -m repro.launch.dryrun --arch gemma2-9b --shape train_4k
+#
+# Artifacts: artifacts/dryrun/<mesh>/<arch>__<shape>.json (idempotent: existing
+# artifacts are skipped unless --force).  EXPERIMENTS.md §Dry-run and the
+# roofline analysis read these files.
+# (module docstring kept as a comment: the XLA_FLAGS lines above must be the
+#  first statements in the file.)
+
+import argparse
+import json
+import pathlib
+import re
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import base, registry
+from repro.configs import wtbc_paper
+from repro.launch import mesh as mesh_lib
+from repro.optim import adamw
+
+ART = pathlib.Path(__file__).resolve().parents[3] / "artifacts" / "dryrun"
+
+KIND_ARGS = {
+    "train": ("batch",),
+    "prefill": ("tokens",),
+    "decode": ("caches", "tokens", "cache_len"),
+    "serve": ("batch",),
+    "retrieval": ("batch",),
+}
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1,
+                "f8e5m2": 1, "s64": 8, "u64": 8, "s32": 4, "u32": 4,
+                "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1, "c64": 8,
+                "c128": 16}
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def _tensor_bytes(dtype: str, dims: str) -> int:
+    if dtype not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    for d in dims.split(","):
+        d = d.strip()
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def parse_collectives(hlo: str) -> dict:
+    """Per-device wire-byte estimate per collective kind.
+
+    Model (ring algorithms): all-reduce moves 2x payload; gather/scatter/
+    permute/all-to-all move ~1x.  Payload per op = largest tensor named on
+    the op's line (robust to tuple-typed async starts).  `-done` halves of
+    async pairs are skipped.
+    """
+    out = {k: {"count": 0, "bytes": 0} for k in COLLECTIVES}
+    for line in hlo.splitlines():
+        s = line.strip()
+        if not s or s.startswith("//"):
+            continue
+        hit = None
+        for k in COLLECTIVES:
+            if re.search(rf"(?:^|[ (]){k}(?:-start)?\(", s):
+                hit = k
+                break
+        if hit is None or f"{hit}-done" in s:
+            continue
+        sizes = [_tensor_bytes(t, d)
+                 for t, d in re.findall(r"([a-z0-9]+)\[([0-9,]*)\]", s)]
+        payload = max(sizes, default=0)
+        mult = 2 if hit == "all-reduce" else 1
+        out[hit]["count"] += 1
+        out[hit]["bytes"] += mult * payload
+    out["total_bytes"] = sum(v["bytes"] for k, v in out.items()
+                             if isinstance(v, dict))
+    return out
+
+
+def _mem_dict(mem) -> dict:
+    if mem is None:
+        return {"unavailable": True}
+    keys = ("argument_size_in_bytes", "output_size_in_bytes",
+            "temp_size_in_bytes", "generated_code_size_in_bytes",
+            "alias_size_in_bytes", "peak_memory_in_bytes")
+    d = {}
+    for k in keys:
+        v = getattr(mem, k, None)
+        if v is not None:
+            d[k] = int(v)
+    return d or {"repr": str(mem)}
+
+
+def _shardings(mesh, tree):
+    return jax.tree.map(
+        lambda spec: NamedSharding(mesh, spec), tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def lower_cell(arch, cell: base.Cell, mesh, mesh_name: str,
+               cfg_override=None) -> dict:
+    t0 = time.time()
+    rules = base.make_rules(mesh.axis_names, cell)
+    rec = {"cell": cell.cell_id, "kind": cell.kind, "mesh": mesh_name,
+           "mesh_shape": dict(zip(mesh.axis_names,
+                                  np.array(mesh.devices.shape).tolist())),
+           "rules": {k: v for k, v in rules.rules}}
+
+    if arch.name == "wtbc":
+        cfg = arch.config()
+        sharded_abs = wtbc_paper.abstract_sharded(cfg, mesh.size)
+        fn = arch.make_query_fn(cfg, cell.shape, mesh, tuple(mesh.axis_names))
+        inputs = arch.abstract_inputs(cfg, cell.shape)
+        in_specs = (arch.sharded_specs(sharded_abs, tuple(mesh.axis_names)),
+                    P(), P())
+        args = (sharded_abs, inputs["words"], inputs["wmask"])
+        jitted = jax.jit(fn, in_shardings=_shardings(mesh, in_specs))
+    else:
+        cfg = arch.config_for(cell.shape) if hasattr(arch, "config_for") \
+            else arch.config()
+        if cfg_override is not None:
+            cfg = cfg_override(cfg)
+        step = arch.make_step(cfg, cell.kind, rules)
+        pspecs = arch.param_specs(cfg, rules)
+        params_abs = arch.abstract_params(cfg)
+        inputs_abs = arch.abstract_inputs(cfg, cell.shape)
+        input_specs = arch.input_specs(cfg, cell.shape, rules)
+        arg_names = KIND_ARGS[cell.kind]
+        args = [params_abs] + [inputs_abs[n] for n in arg_names]
+        specs = [pspecs] + [input_specs[n] for n in arg_names]
+        if cell.kind == "train":
+            opt_abs = jax.eval_shape(adamw.init_state, params_abs)
+            ospecs = adamw.state_specs(pspecs)
+            args.insert(1, opt_abs)
+            specs.insert(1, ospecs)
+        rec["flops_note"] = arch.flops_note(cfg)
+        jitted = jax.jit(step, in_shardings=tuple(
+            _shardings(mesh, s) for s in specs))
+        args = tuple(args)
+
+    with mesh:
+        lowered = jitted.lower(*args)
+        t1 = time.time()
+        compiled = lowered.compile()
+        t2 = time.time()
+
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    mem = None
+    try:
+        mem = compiled.memory_analysis()
+    except Exception:
+        pass
+    hlo = compiled.as_text()
+
+    rec.update({
+        "ok": True,
+        "lower_s": round(t1 - t0, 2),
+        "compile_s": round(t2 - t1, 2),
+        "cost_analysis": {k: float(v) for k, v in (cost or {}).items()
+                          if isinstance(v, (int, float)) and np.isfinite(v)},
+        "memory_analysis": _mem_dict(mem),
+        "collectives": parse_collectives(hlo),
+        "hlo_bytes": len(hlo),
+    })
+    return rec
+
+
+def probe_groups(mesh_name: str, arch_filter: str | None = None,
+                 shape_filter: str | None = None) -> None:
+    """Two-point scan-trip probe for LM cells (XLA cost analysis counts a
+    ``scan`` body once; compiling with 1 and 2 layer groups lets the roofline
+    extrapolate exact totals: total = m1 + (G-1)·(m2-m1))."""
+    import dataclasses as dc
+    mesh = mesh_lib.make_production_mesh(multi_pod=(mesh_name == "multi"))
+    outdir = ART / mesh_name
+    outdir.mkdir(parents=True, exist_ok=True)
+    for cell in registry.all_cells(include_paper=False):
+        arch = registry.get(cell.arch)
+        if arch.family != "lm" or cell.skip:
+            continue
+        if arch_filter and cell.arch != arch_filter:
+            continue
+        if shape_filter and cell.shape != shape_filter:
+            continue
+        path = outdir / f"{cell.arch}__{cell.shape}.json"
+        if not path.exists():
+            continue
+        rec = json.loads(path.read_text())
+        if "probe_g1" in rec and "probe_g2" in rec:
+            continue
+        print(f"[probe] {cell.cell_id} on {mesh_name}", flush=True)
+        try:
+            for g in (1, 2):
+                def override(cfg, g=g):
+                    return dc.replace(cfg, n_layers=len(cfg.pattern) * g)
+                sub = lower_cell(arch, cell, mesh, mesh_name, cfg_override=override)
+                rec[f"probe_g{g}"] = {
+                    "cost_analysis": sub["cost_analysis"],
+                    "collectives": sub["collectives"],
+                    "memory_analysis": sub["memory_analysis"],
+                }
+            cfg = arch.config_for(cell.shape)
+            rec["n_groups"] = cfg.n_groups
+            path.write_text(json.dumps(rec, indent=1))
+            print("  probe ok", flush=True)
+        except Exception as e:
+            print(f"  probe FAILED: {type(e).__name__}: {str(e)[:200]}", flush=True)
+
+
+def run(mesh_name: str, arch_filter: str | None, shape_filter: str | None,
+        force: bool, include_paper: bool = True) -> int:
+    multi = mesh_name == "multi"
+    mesh = mesh_lib.make_production_mesh(multi_pod=multi)
+    outdir = ART / mesh_name
+    outdir.mkdir(parents=True, exist_ok=True)
+    failures = 0
+    for cell in registry.all_cells(include_paper=include_paper):
+        if arch_filter and cell.arch != arch_filter:
+            continue
+        if shape_filter and cell.shape != shape_filter:
+            continue
+        path = outdir / f"{cell.arch}__{cell.shape}.json"
+        if path.exists() and not force:
+            print(f"[skip-cached] {cell.cell_id}")
+            continue
+        arch = registry.get(cell.arch)
+        if cell.skip:
+            rec = {"cell": cell.cell_id, "mesh": mesh_name, "ok": True,
+                   "skipped": cell.skip}
+            path.write_text(json.dumps(rec, indent=1))
+            print(f"[skip-by-design] {cell.cell_id}: {cell.skip}")
+            continue
+        print(f"[lower+compile] {cell.cell_id} on {mesh_name} ...", flush=True)
+        try:
+            rec = lower_cell(arch, cell, mesh, mesh_name)
+            ca = rec["cost_analysis"]
+            print(f"  ok: compile={rec['compile_s']}s "
+                  f"flops={ca.get('flops', float('nan')):.3e} "
+                  f"coll={rec['collectives']['total_bytes']:.3e}B", flush=True)
+        except Exception as e:
+            failures += 1
+            rec = {"cell": cell.cell_id, "mesh": mesh_name, "ok": False,
+                   "error": f"{type(e).__name__}: {e}",
+                   "traceback": traceback.format_exc()[-4000:]}
+            print(f"  FAILED: {type(e).__name__}: {str(e)[:300]}", flush=True)
+        path.write_text(json.dumps(rec, indent=1))
+    return failures
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", choices=("single", "multi", "both"), default="both")
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--no-paper", action="store_true")
+    ap.add_argument("--probe", action="store_true",
+                    help="two-point scan-trip probe for LM cells")
+    args = ap.parse_args()
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    failures = 0
+    for m in meshes:
+        if args.probe:
+            probe_groups(m, args.arch, args.shape)
+        else:
+            failures += run(m, args.arch, args.shape, args.force,
+                            include_paper=not args.no_paper)
+    print(f"dry-run complete; failures={failures}")
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,24 @@
+"""Production mesh construction (function, not module-level constant — importing
+this module never touches jax device state)."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips per pod; multi_pod stacks 2 pods = 512 chips."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh():
+    """Whatever devices exist (tests / examples on CPU): 1D 'data' mesh."""
+    n = len(jax.devices())
+    return jax.make_mesh((n,), ("data",))
+
+
+# TPU v5e hardware constants for the roofline (DESIGN.md / EXPERIMENTS.md)
+PEAK_FLOPS_BF16 = 197e12        # per chip
+HBM_BW = 819e9                  # bytes/s per chip
+ICI_BW = 50e9                   # bytes/s per link

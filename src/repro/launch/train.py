@@ -1,0 +1,94 @@
+"""Training launcher: --arch <id> [--smoke] [--steps N] [--resume].
+
+On this CPU container the practical path is ``--smoke`` (reduced config,
+local mesh); the same code drives the production mesh on real hardware —
+the mesh/sharding wiring is identical to dryrun.py, just with concrete
+arrays instead of ShapeDtypeStructs.
+
+Fault tolerance is on by default: async checkpoints every --ckpt-every
+steps, restore-on-start when --resume, deterministic counter->batch data
+(runtime/fault_tolerance.py proves restart continuity in tests).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import base, registry
+from repro.configs.base import make_rules
+from repro.checkpoint import ckpt as ckpt_lib
+from repro.data import pipeline
+from repro.launch import mesh as mesh_lib
+from repro.optim import adamw
+from repro.runtime.fault_tolerance import StragglerWatchdog
+
+
+def make_batch_fn(arch, cfg, batch: int, seq: int, seed: int):
+    fam = arch.family
+    if fam == "lm":
+        return lambda step: pipeline.lm_batch(seed, step, batch, seq, cfg.vocab)
+    if fam == "recsys":
+        return lambda step: pipeline.recsys_batch(seed, step, batch, cfg)
+    if fam == "gnn":
+        g = pipeline.random_graph(seed, n_nodes=512, n_edges=2048,
+                                  d_feat=cfg.d_feat, n_classes=cfg.n_classes)
+        return lambda step: g
+    raise ValueError(fam)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--ckpt-every", type=int, default=10)
+    ap.add_argument("--ckpt-dir", default="artifacts/ckpt")
+    ap.add_argument("--resume", action="store_true")
+    args = ap.parse_args()
+
+    arch = registry.get(args.arch)
+    cfg = arch.config(smoke=args.smoke)
+    mesh = mesh_lib.make_local_mesh()
+    rules = make_rules(mesh.axis_names)
+    step_fn = jax.jit(arch.make_step(cfg, "train", rules))
+
+    key = jax.random.PRNGKey(args.seed)
+    params = arch.init_params(key, cfg)
+    opt = adamw.init_state(params)
+    start = 0
+    ckpt_dir = f"{args.ckpt_dir}/{args.arch}"
+    if args.resume and ckpt_lib.list_steps(ckpt_dir):
+        (state, start) = ckpt_lib.restore(ckpt_dir, {"params": params, "opt": opt})
+        params, opt = state["params"], state["opt"]
+        print(f"resumed from step {start}")
+
+    batch_fn = make_batch_fn(arch, cfg, args.batch, args.seq, args.seed)
+    saver = ckpt_lib.AsyncCheckpointer(ckpt_dir)
+    wd = StragglerWatchdog()
+    with mesh:
+        for step in range(start, args.steps):
+            t0 = time.time()
+            params, opt, metrics = step_fn(params, opt, batch_fn(step))
+            dt = time.time() - t0
+            slow = wd.observe(step, dt)
+            if step % 5 == 0 or step == args.steps - 1:
+                print(f"step {step:5d} loss={float(metrics['loss']):.4f} "
+                      f"gnorm={float(metrics['grad_norm']):.3f} "
+                      f"dt={dt*1e3:.1f}ms{'  [straggler]' if slow else ''}",
+                      flush=True)
+            if (step + 1) % args.ckpt_every == 0:
+                saver.save_async(step + 1, {"params": params, "opt": opt})
+    saver.wait()
+    ckpt_lib.save(ckpt_dir, args.steps, {"params": params, "opt": opt})
+    print("done")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,195 @@
+"""Attention: GQA with per-layer pattern (global / sliding-window / chunked),
+optional qk-norm (Qwen3) and attention-logit softcap (Gemma-2), RoPE or NoPE.
+
+Memory discipline (the difference between lowering at 32k and not):
+
+* **Grouped einsums** — queries are shaped (B, S, KV, G, Dh) so the KV tensor
+  is never repeated across the G = H/KV query heads per KV head (a 16x blowup
+  for Qwen3-MoE's 64q/4kv at decode).
+* **Blockwise (flash-style) online-softmax** over KV chunks for S > 2048:
+  running (m, l, acc) carried through a ``lax.scan``; peak live score tensor
+  is (B, KV, G, S, block) instead of (B, H, S, S) — prefill_32k drops from
+  ~1.1 TB of logits to ~68 GB transient, and remat frees it per layer.
+* Decode attends one token against a KV cache whose sequence axis may be
+  sharded over mesh axes (sequence-parallel decode: XLA inserts the softmax
+  all-reduce — flash-decoding's split-KV in SPMD form).
+
+Layer patterns:
+  'global'   full causal
+  'local'    sliding window `window` (Gemma-2 alternates local/global)
+  'chunked'  attention confined to aligned `window` chunks (Llama-4 iRoPE
+             local layers; its global layers are 'global' with NoPE)
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+PATTERNS = ("global", "local", "chunked")
+FLASH_THRESHOLD = 2048    # dense path below, blockwise at/above
+KV_BLOCK = 1024
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnConfig:
+    n_heads: int
+    n_kv_heads: int
+    d_head: int
+    qk_norm: bool = False
+    softcap: float | None = None      # attention-logit soft cap (gemma2: 50)
+    rope_theta: float = 10000.0
+    window: int = 0                   # for local/chunked patterns
+
+
+def init_attn(key, d_model: int, cfg: AttnConfig, dtype=jnp.float32) -> dict:
+    ks = jax.random.split(key, 5)
+    p = {
+        "wq": L.init_dense(ks[0], d_model, cfg.n_heads * cfg.d_head, dtype),
+        "wk": L.init_dense(ks[1], d_model, cfg.n_kv_heads * cfg.d_head, dtype),
+        "wv": L.init_dense(ks[2], d_model, cfg.n_kv_heads * cfg.d_head, dtype),
+        "wo": L.init_dense(ks[3], cfg.n_heads * cfg.d_head, d_model, dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.zeros((cfg.d_head,), dtype)
+        p["k_norm"] = jnp.zeros((cfg.d_head,), dtype)
+    return p
+
+
+def _mask(pattern_id: jnp.ndarray, q_pos: jnp.ndarray, k_pos: jnp.ndarray,
+          window: int) -> jnp.ndarray:
+    """Boolean (q, k) mask for pattern_id in {0: global, 1: local, 2: chunked}."""
+    w = max(window, 1)
+    causal = k_pos[None, :] <= q_pos[:, None]
+    local = causal & (q_pos[:, None] - k_pos[None, :] < w)
+    chunked = causal & (q_pos[:, None] // w == k_pos[None, :] // w)
+    return jnp.where(pattern_id == 0, causal,
+                     jnp.where(pattern_id == 1, local, chunked))
+
+
+def _grouped_scores(q5, k, scale: float, softcap: float | None):
+    """q5 (B,S,KV,G,Dh) x k (B,T,KV,Dh) -> fp32 (B,KV,G,S,T), softcapped."""
+    s = jnp.einsum("bskgd,btkd->bkgst", q5, k) * scale
+    return L.softcap(s.astype(jnp.float32), softcap)
+
+
+def _dense_attend(q5, k, v, mask, softcap, scale):
+    scores = _grouped_scores(q5, k, scale, softcap)
+    scores = jnp.where(mask, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q5.dtype)
+    return jnp.einsum("bkgst,btkd->bskgd", probs, v)
+
+
+def _flash_attend(q5, k, v, pattern_id, window, softcap, scale, block: int):
+    """Online-softmax blockwise attention; causal-pattern masks per block."""
+    B, S, KV, G, Dh = q5.shape
+    T = k.shape[1]
+    n_blocks = -(-T // block)
+    pad = n_blocks * block - T
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kb = k.reshape(B, n_blocks, block, KV, Dh)
+    vb = v.reshape(B, n_blocks, block, KV, Dh)
+    q_pos = jnp.arange(S, dtype=jnp.int32)
+
+    def body(carry, blk):
+        m, l, acc = carry
+        k_j, v_j, j = blk
+        k_pos = j * block + jnp.arange(block, dtype=jnp.int32)
+        s = jnp.einsum("bskgd,btkd->bkgst", q5, k_j) * scale        # fp32 below
+        s = L.softcap(s.astype(jnp.float32), softcap)
+        msk = (_mask(pattern_id, q_pos, k_pos, window)
+               & (k_pos < T)[None, :])                              # (S, block)
+        s = jnp.where(msk[None, None, None], s, -1e30)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        acc_new = (acc * corr[..., None]
+                   + jnp.einsum("bkgst,btkd->bkgsd", p.astype(q5.dtype), v_j)
+                   .astype(jnp.float32))
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, KV, G, S), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((B, KV, G, S), jnp.float32)
+    a0 = jnp.zeros((B, KV, G, S, Dh), jnp.float32)
+    kb_t = jnp.moveaxis(kb, 1, 0)
+    vb_t = jnp.moveaxis(vb, 1, 0)
+    (m, l, acc), _ = jax.lax.scan(
+        body, (m0, l0, a0), (kb_t, vb_t, jnp.arange(n_blocks, dtype=jnp.int32)))
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return jnp.moveaxis(out, 3, 1).astype(q5.dtype)                 # (B,S,KV,G,Dh)
+
+
+def attend(params: dict, x: jnp.ndarray, cfg: AttnConfig,
+           pattern_id: jnp.ndarray, *, rules: L.MeshRules,
+           use_rope: bool = True,
+           kv_cache: tuple[jnp.ndarray, jnp.ndarray] | None = None,
+           cache_len: jnp.ndarray | None = None) -> tuple[jnp.ndarray, tuple]:
+    """x: (B, S, D).  Training/prefill when kv_cache is None; decode (S == 1,
+    new token written at slot ``cache_len % S_kv``) otherwise.
+
+    Returns (output (B, S, D), kv pair (B, S_kv, KV, Dh))."""
+    B, S, D = x.shape
+    H, KV, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    G = H // KV
+    scale = 1.0 / (Dh ** 0.5)
+
+    q = (x @ params["wq"]).reshape(B, S, H, Dh)
+    k = (x @ params["wk"]).reshape(B, S, KV, Dh)
+    v = (x @ params["wv"]).reshape(B, S, KV, Dh)
+    if cfg.qk_norm:
+        q = L.rms_norm(q, params["q_norm"])
+        k = L.rms_norm(k, params["k_norm"])
+
+    if kv_cache is None:
+        pos = jnp.arange(S, dtype=jnp.int32)[None, :].repeat(B, 0)
+        if use_rope:                            # static per layer-group position
+            q = L.rope(q, pos, cfg.rope_theta)
+            k = L.rope(k, pos, cfg.rope_theta)
+        q = L.constrain(q, rules, "batch", "seq", "heads", None)
+        k = L.constrain(k, rules, "batch", "seq", "kv_heads", None)
+        q5 = q.reshape(B, S, KV, G, Dh)
+        if S >= FLASH_THRESHOLD:
+            o5 = _flash_attend(q5, k, v, pattern_id, cfg.window, cfg.softcap,
+                               scale, KV_BLOCK)
+        else:
+            mask = _mask(pattern_id, jnp.arange(S), jnp.arange(S), cfg.window)
+            o5 = _dense_attend(q5, k, v, mask[None, None, None], cfg.softcap, scale)
+        out = o5.reshape(B, S, H * Dh) @ params["wo"]
+        return out, (k, v)
+
+    # ---- decode: one token vs cache ----------------------------------------
+    ck, cv = kv_cache                           # (B, S_kv, KV, Dh)
+    S_kv = ck.shape[1]
+    if use_rope:
+        pos = jnp.broadcast_to(cache_len, (B, 1))
+        q = L.rope(q, pos, cfg.rope_theta)
+        k = L.rope(k, pos, cfg.rope_theta)
+    zero = jnp.zeros((), jnp.int32)
+    keys = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype),
+                                        (zero, cache_len % S_kv, zero, zero))
+    values = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype),
+                                          (zero, cache_len % S_kv, zero, zero))
+    keys = L.constrain(keys, rules, "batch", "kv_seq", "kv_heads", None)
+    values = L.constrain(values, rules, "batch", "kv_seq", "kv_heads", None)
+    kq_pos = jnp.arange(S_kv, dtype=jnp.int32)
+    ring_full = cache_len >= S_kv               # window-sized ring has wrapped
+    valid = (kq_pos[None, :] <= cache_len) | ring_full
+    if S_kv <= max(cfg.window, 1):
+        # ring buffer sized to the window: every live slot is in-window
+        # (keys were RoPE'd at absolute positions when written)
+        mask = valid
+    else:
+        mask = _mask(pattern_id, jnp.reshape(cache_len, (1,)), kq_pos,
+                     cfg.window) & valid
+    q5 = q.reshape(B, 1, KV, G, Dh)
+    o5 = _dense_attend(q5, keys, values, mask[None, None, None], cfg.softcap, scale)
+    out = o5.reshape(B, S, H * Dh) @ params["wo"]
+    return out, (keys, values)

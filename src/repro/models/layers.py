@@ -1,0 +1,115 @@
+"""Shared neural layers (pure functions over param pytrees) + sharding rules.
+
+Sharding follows the logical-axis-rules pattern: every parameter/activation
+dimension is tagged with a logical name; ``MeshRules`` maps logical names to
+mesh axes (DESIGN.md §4).  ``logical_to_spec`` produces PartitionSpecs for
+pjit in_shardings and ``constrain`` applies in-function constraints.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+# ---------------------------------------------------------------------------
+# logical axis rules
+# ---------------------------------------------------------------------------
+
+#: default production rules: batch over (pod, data); model dims over model.
+DEFAULT_RULES: dict[str, Any] = {
+    "batch": ("pod", "data"),
+    "seq": None,              # sequence kept unsharded for training activations
+    "kv_seq": "model",        # decode: split-KV over model axis (flash-decode)
+    "heads": "model",
+    "kv_heads": None,         # GQA kv counts (4-8) don't divide model=16; replicate
+    "embed": None,
+    "mlp": "model",
+    "vocab": "model",
+    "experts": "model",
+    "expert_capacity": ("pod", "data"),  # shard the MoE dispatch buffers
+    "tokens_flat": ("pod", "data"),      # flattened (B*S,) routing arrays
+    "rows": ("pod", "data"),  # embedding-table rows (recsys)
+    "table_dim": "model",
+    "edges": ("pod", "data"), # GNN edge lists
+    "nodes": ("pod", "data"),
+    "stack": None,            # scanned layer stack
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshRules:
+    rules: tuple[tuple[str, Any], ...]
+
+    @classmethod
+    def make(cls, overrides: dict[str, Any] | None = None) -> "MeshRules":
+        r = dict(DEFAULT_RULES)
+        if overrides:
+            r.update(overrides)
+        return cls(tuple(sorted(r.items())))
+
+    def spec(self, *logical: str | None) -> P:
+        d = dict(self.rules)
+        return P(*[d.get(ax) if ax is not None else None for ax in logical])
+
+
+def constrain(x: jnp.ndarray, rules: MeshRules, *logical: str | None) -> jnp.ndarray:
+    """with_sharding_constraint by logical names (no-op outside jit/mesh)."""
+    try:
+        return jax.lax.with_sharding_constraint(x, rules.spec(*logical))
+    except Exception:   # no mesh / axis absent / spec invalid for this shape
+        return x
+
+
+# ---------------------------------------------------------------------------
+# primitives
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+
+
+def softcap(logits: jnp.ndarray, cap: float | None) -> jnp.ndarray:
+    """Gemma-2 logit soft-capping: cap * tanh(x / cap)."""
+    if cap is None:
+        return logits
+    return jnp.tanh(logits / cap) * cap
+
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float = 10000.0) -> jnp.ndarray:
+    """Rotary embeddings. x: (..., seq, heads, d_head); positions: (..., seq)."""
+    d = x.shape[-1]
+    half = d // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions[..., :, None, None].astype(jnp.float32) * freq  # (..., s, 1, half)
+    sin, cos = jnp.sin(angles), jnp.cos(angles)
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def init_dense(key, d_in: int, d_out: int, dtype=jnp.float32) -> jnp.ndarray:
+    scale = (1.0 / d_in) ** 0.5
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale).astype(dtype)
+
+
+def mlp_apply(params: dict, x: jnp.ndarray, act=jax.nn.silu,
+              gated: bool = True) -> jnp.ndarray:
+    """SwiGLU (gated=True) or plain MLP."""
+    if gated:
+        h = act(x @ params["wi_gate"]) * (x @ params["wi_up"])
+    else:
+        h = act(x @ params["wi_up"])
+    return h @ params["wo"]
+
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    """Mean token NLL; logits (..., V) any float dtype, labels int."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)

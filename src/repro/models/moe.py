@@ -1,0 +1,314 @@
+"""Mixture-of-Experts FFN: top-k token-choice routing, sort-based dispatch.
+
+Dispatch strategy (DESIGN.md §4): the classical one-hot einsum dispatch
+materializes a (T, E, C) tensor — quadratic in tokens at large T.  We instead
+sort the (T·k) routed copies by expert id, compute each copy's slot inside its
+expert via exclusive-cumsum arithmetic, and scatter into a capacity-bounded
+(E, C, D) buffer (overflow drops, GShard-style).  Expert FLOPs are then two
+MXU-shaped batched einsums.  Under the production mesh the buffer is sharded
+over ``experts -> model`` and tokens over ``batch -> (pod, data)``; XLA SPMD
+lowers the scatter/gather pair to the expert-parallel all-to-all.
+
+top-k gates are softmax-renormalized over the selected experts (Qwen3-MoE's
+``norm_topk_prob``); ``n_shared`` adds always-on shared experts (Llama-4).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    d_ff: int                      # per-expert hidden size
+    n_shared: int = 0              # always-on shared experts (fused as one MLP)
+    capacity_factor: float = 1.25
+
+
+def init_moe(key, d_model: int, cfg: MoEConfig, dtype=jnp.float32) -> dict:
+    ks = jax.random.split(key, 5)
+    E, F = cfg.n_experts, cfg.d_ff
+    scale = (1.0 / d_model) ** 0.5
+    p = {
+        "router": L.init_dense(ks[0], d_model, E, jnp.float32),  # fp32 router
+        "wi_gate": (jax.random.normal(ks[1], (E, d_model, F)) * scale).astype(dtype),
+        "wi_up": (jax.random.normal(ks[2], (E, d_model, F)) * scale).astype(dtype),
+        "wo": (jax.random.normal(ks[3], (E, F, d_model)) * (1.0 / F) ** 0.5).astype(dtype),
+    }
+    if cfg.n_shared:
+        Fs = F * cfg.n_shared
+        kss = jax.random.split(ks[4], 3)
+        p["shared"] = {
+            "wi_gate": L.init_dense(kss[0], d_model, Fs, dtype),
+            "wi_up": L.init_dense(kss[1], d_model, Fs, dtype),
+            "wo": L.init_dense(kss[2], Fs, d_model, dtype),
+        }
+    return p
+
+
+def _pinned_dispatch_ops(rules: L.MeshRules, E: int, C: int, T: int,
+                         D: int, dtype):
+    """Gather/scatter for MoE dispatch with **pinned cotangent shardings**.
+
+    XLA's backward sharding propagation fails through the scatter fusions the
+    dispatch produces: the (T*K, D) cotangents materialize fully replicated
+    (measured: repeated 128 GiB f32/u32 all-reduce/all-gather pairs on
+    qwen3-moe train_4k — EXPERIMENTS.md §Perf iteration 2).  custom_vjp lets
+    us constrain both the primal and the cotangent of every gather/scatter.
+    """
+
+    @jax.custom_vjp
+    def token_gather(x, tok):                       # (T,D),(TK,) -> (TK,D)
+        return x[tok]
+
+    def token_gather_fwd(x, tok):
+        y = L.constrain(x[tok], rules, "tokens_flat", None)
+        return y, (tok,)
+
+    def token_gather_bwd(res, g):
+        (tok,) = res
+        g = L.constrain(g.astype(dtype), rules, "tokens_flat", None)
+        gx = jnp.zeros((T, D), dtype).at[tok].add(g)
+        return L.constrain(gx, rules, "tokens_flat", None), None
+
+    token_gather.defvjp(token_gather_fwd, token_gather_bwd)
+
+    @jax.custom_vjp
+    def buf_scatter(vals, e, slot):                 # (TK,D) -> (E,C,D)
+        buf = jnp.zeros((E, C, D), dtype)
+        return buf.at[e, slot].set(vals, mode="drop")
+
+    def buf_scatter_fwd(vals, e, slot):
+        buf = jnp.zeros((E, C, D), dtype)
+        buf = buf.at[e, slot].set(vals, mode="drop")
+        return (L.constrain(buf, rules, "experts", "expert_capacity", None),
+                (e, slot))
+
+    def buf_scatter_bwd(res, g):
+        e, slot = res
+        g = L.constrain(g.astype(dtype), rules, "experts", "expert_capacity", None)
+        gv = g.at[e, slot].get(mode="fill", fill_value=0)
+        return L.constrain(gv, rules, "tokens_flat", None), None, None
+
+    buf_scatter.defvjp(buf_scatter_fwd, buf_scatter_bwd)
+
+    @jax.custom_vjp
+    def buf_gather(buf, e, slot):                   # (E,C,D) -> (TK,D)
+        return buf.at[e, slot].get(mode="fill", fill_value=0)
+
+    def buf_gather_fwd(buf, e, slot):
+        y = buf.at[e, slot].get(mode="fill", fill_value=0)
+        return (L.constrain(y, rules, "tokens_flat", None), (e, slot))
+
+    def buf_gather_bwd(res, g):
+        e, slot = res
+        g = L.constrain(g.astype(dtype), rules, "tokens_flat", None)
+        gb = jnp.zeros((E, C, D), dtype).at[e, slot].add(g, mode="drop")
+        return (L.constrain(gb, rules, "experts", "expert_capacity", None),
+                None, None)
+
+    buf_gather.defvjp(buf_gather_fwd, buf_gather_bwd)
+
+    @jax.custom_vjp
+    def token_combine(y_weighted, tok):             # (TK,D) -> (T,D)
+        return jnp.zeros((T, D), dtype).at[tok].add(y_weighted)
+
+    def token_combine_fwd(y_weighted, tok):
+        out = jnp.zeros((T, D), dtype).at[tok].add(y_weighted)
+        return (L.constrain(out, rules, "tokens_flat", None), (tok,))
+
+    def token_combine_bwd(res, g):
+        (tok,) = res
+        g = L.constrain(g.astype(dtype), rules, "tokens_flat", None)
+        gy = L.constrain(g[tok], rules, "tokens_flat", None)
+        return gy, None
+
+    token_combine.defvjp(token_combine_fwd, token_combine_bwd)
+    return token_gather, buf_scatter, buf_gather, token_combine
+
+
+def moe_apply(params: dict, x: jnp.ndarray, cfg: MoEConfig,
+              rules: L.MeshRules) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (T, D) flattened tokens.  Returns (out (T, D), aux_loss ()).
+
+    Two dispatch paths:
+    * under a mesh with a 'model' axis: **shard_map expert parallelism**
+      (`_moe_ep_shardmap`) — per-shard local sort/scatter (zero SPMD scatter
+      collectives), expert weights sharded over 'model', one psum of the
+      (T_local, D) partial outputs per layer.  This replaced the pjit global
+      dispatch after EXPERIMENTS.md §Perf iterations 1-2 measured XLA
+      replicating (T*K, D) dispatch cotangents (128 GiB collectives).
+    * otherwise (CPU tests, single device): the pjit sort-based dispatch.
+    """
+    mesh = _current_mesh()
+    if mesh is not None and "model" in mesh.axis_names:
+        tok_div = 1
+        for a in ("pod", "data"):
+            if a in mesh.axis_names:
+                tok_div *= mesh.shape[a]
+        if (x.shape[0] % tok_div == 0
+                and cfg.n_experts % mesh.shape["model"] == 0):
+            return _moe_ep_shardmap(params, x, cfg, rules, mesh)
+    return _moe_dense_dispatch(params, x, cfg, rules)
+
+
+def _current_mesh():
+    try:
+        m = jax.sharding.get_abstract_mesh()
+        if m is not None and m.axis_names:
+            return m
+    except Exception:
+        pass
+    try:
+        from jax._src import mesh as mesh_lib
+        m = mesh_lib.thread_resources.env.physical_mesh
+        if m is not None and not m.empty:
+            return m
+    except Exception:
+        pass
+    return None
+
+
+def _router(params, x, cfg: MoEConfig):
+    """Shared routing math: returns (gates (T,K), eidx (T,K), aux ())."""
+    E, K = cfg.n_experts, cfg.top_k
+    logits = x.astype(jnp.float32) @ params["router"]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, eidx = jax.lax.top_k(probs, K)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+    me = jnp.mean(probs, axis=0)
+    ce = jnp.mean(jax.nn.one_hot(eidx[:, 0], E, dtype=jnp.float32), axis=0)
+    return gates, eidx, E * jnp.sum(me * ce)
+
+
+def _moe_ep_shardmap(params, x, cfg: MoEConfig, rules: L.MeshRules, mesh):
+    """Expert-parallel MoE: tokens replicated over 'model', experts sharded.
+
+    Each model-shard owns E_local = E/M experts; it dispatches the tokens of
+    its (pod, data) block routed to its experts with purely LOCAL sort +
+    scatter (collision-free), runs the expert FFN, scatters results back and
+    psums partial outputs over 'model' (each token touched K experts spread
+    across shards).  Collectives per layer: one psum of (T_local, D) — the
+    minimum for replicated-activation expert parallelism.
+    """
+    from jax.sharding import PartitionSpec as P
+    E, K = cfg.n_experts, cfg.top_k
+    M = mesh.shape["model"]
+    assert E % M == 0, (E, M)
+    E_loc = E // M
+    token_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    tok_spec = P(token_axes if len(token_axes) > 1 else
+                 (token_axes[0] if token_axes else None), None)
+
+    def local(px, x_loc):
+        T_loc, D = x_loc.shape
+        C = max(8, int(T_loc * K * cfg.capacity_factor / E_loc / M) * 2)
+        gates, eidx, aux = _router(px, x_loc, cfg)
+        m = jax.lax.axis_index("model")
+        e_flat = eidx.reshape(-1).astype(jnp.int32)
+        g_flat = gates.reshape(-1).astype(x_loc.dtype)
+        tok = jnp.repeat(jnp.arange(T_loc, dtype=jnp.int32), K)
+        # route only this shard's experts; everything else -> overflow bucket
+        mine = (e_flat // E_loc) == m
+        e_loc = jnp.where(mine, e_flat - m * E_loc, E_loc)
+        order = jnp.argsort(e_loc)
+        e_s, tok_s, g_s = e_loc[order], tok[order], g_flat[order]
+        counts = jnp.zeros((E_loc + 1,), jnp.int32).at[e_loc].add(1)
+        starts = jnp.concatenate([jnp.zeros((1,), jnp.int32),
+                                  jnp.cumsum(counts)[:-1]])
+        slot = jnp.arange(T_loc * K, dtype=jnp.int32) - starts[e_s]
+        keep = e_s < E_loc
+        buf = jnp.zeros((E_loc, C, D), x_loc.dtype)
+        buf = buf.at[jnp.where(keep, e_s, E_loc), slot].set(
+            x_loc[tok_s], mode="drop")
+
+        h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, px["wi_gate"]))
+        h = h * jnp.einsum("ecd,edf->ecf", buf, px["wi_up"])
+        out_buf = jnp.einsum("ecf,efd->ecd", h, px["wo"])
+
+        y = out_buf.at[jnp.where(keep, e_s, E_loc), slot].get(
+            mode="fill", fill_value=0)                      # (T_loc*K, D)
+        y = y * (g_s * keep.astype(g_s.dtype))[:, None]
+        out = jnp.zeros((T_loc, D), x_loc.dtype).at[tok_s].add(y)
+        out = jax.lax.psum(out, "model")                    # combine K experts
+        if cfg.n_shared:
+            # shared expert runs on the first model shard only (its weights
+            # are replicated; psum above already merged routed experts)
+            shared = L.mlp_apply(px["shared"], x_loc)
+            out = out + shared
+        for ax in token_axes:
+            aux = jax.lax.pmean(aux, ax)
+        return out, jax.lax.pmean(aux, "model")
+
+    expert_specs = {
+        "router": P(None, None),
+        "wi_gate": P("model", None, None),
+        "wi_up": P("model", None, None),
+        "wo": P("model", None, None),
+    }
+    if cfg.n_shared:
+        expert_specs["shared"] = {"wi_gate": P(None, None),
+                                  "wi_up": P(None, None),
+                                  "wo": P(None, None)}
+    fn = jax.shard_map(local, mesh=mesh,
+                       in_specs=(expert_specs, tok_spec),
+                       out_specs=(tok_spec, P()),
+                       check_vma=False)
+    return fn(params, x)
+
+
+def _moe_dense_dispatch(params, x, cfg: MoEConfig, rules: L.MeshRules):
+    """pjit global sort-based dispatch (single-device / no-'model'-axis path)."""
+    T, D = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    capacity = max(8, int(T * K * cfg.capacity_factor / E))
+
+    logits = (x.astype(jnp.float32) @ params["router"])          # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, eidx = jax.lax.top_k(probs, K)                        # (T, K)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+
+    # load-balancing auxiliary loss (Switch): E * sum_e f_e * p_e
+    me = jnp.mean(probs, axis=0)
+    ce = jnp.mean(jax.nn.one_hot(eidx[:, 0], E, dtype=jnp.float32), axis=0)
+    aux = E * jnp.sum(me * ce)
+
+    # ---- sort-based dispatch -------------------------------------------------
+    # Every (T*K)-long routing array and the (E, C, D) buffers carry explicit
+    # sharding constraints: without them XLA materializes replicated copies of
+    # the dispatched activations (measured +47 GB peak / +30 s memory term on
+    # qwen3-moe train_4k — EXPERIMENTS.md §Perf iteration 1).
+    x = L.constrain(x, rules, "tokens_flat", None)
+    tok_ids = jnp.repeat(jnp.arange(T, dtype=jnp.int32), K)      # (T*K,)
+    e_flat = eidx.reshape(-1).astype(jnp.int32)
+    g_flat = gates.reshape(-1)
+    order = jnp.argsort(e_flat)
+    e_sorted = L.constrain(e_flat[order], rules, "tokens_flat")
+    tok_sorted = L.constrain(tok_ids[order], rules, "tokens_flat")
+    g_sorted = L.constrain(g_flat[order], rules, "tokens_flat")
+
+    counts = jnp.zeros((E,), jnp.int32).at[e_flat].add(1)
+    starts = jnp.concatenate([jnp.zeros((1,), jnp.int32), jnp.cumsum(counts)[:-1]])
+    slot = jnp.arange(T * K, dtype=jnp.int32) - starts[e_sorted] # pos within expert
+
+    token_gather, buf_scatter, buf_gather, token_combine = \
+        _pinned_dispatch_ops(rules, E, capacity, T, D, x.dtype)
+    buf = buf_scatter(token_gather(x, tok_sorted), e_sorted, slot)
+
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, params["wi_gate"]))
+    h = h * jnp.einsum("ecd,edf->ecf", buf, params["wi_up"])
+    out_buf = jnp.einsum("ecf,efd->ecd", h, params["wo"])
+    out_buf = L.constrain(out_buf, rules, "experts", "expert_capacity", None)
+
+    y = buf_gather(out_buf, e_sorted, slot)                       # (T*K, D)
+    out = token_combine(y * g_sorted[:, None].astype(x.dtype), tok_sorted)
+
+    if cfg.n_shared:
+        out = out + L.mlp_apply(params["shared"], x)
+    return out, aux

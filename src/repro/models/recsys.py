@@ -1,0 +1,308 @@
+"""Recsys towers: FM, xDeepFM (CIN), DLRM (dot interaction), SASRec.
+
+Common skeleton: huge sparse embedding tables -> feature interaction ->
+small MLP -> CTR logit (or next-item scores for SASRec).
+
+EmbeddingBag contract (the brief): JAX has no native EmbeddingBag — we
+implement it as ``jnp.take`` + ``jax.ops.segment_sum`` (`embedding_bag`), and
+single-valued Criteo-style lookups as the special case.  Table sharding:
+row-sharded over ``(pod, data)`` and column-sharded over ``model`` for large
+tables (DESIGN.md §4); XLA turns gathers on row-sharded tables into the
+standard DLRM model-parallel exchange.
+
+``retrieval_cand`` (score one query against 10^6 candidates) is a batched
+tower evaluation; for SASRec it collapses to one matvec against the item
+table and reuses the fused `kernels/topk_score` primitive.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+# Criteo-1TB per-feature cardinalities (MLPerf DLRM reference)
+CRITEO_1TB_ROWS = (
+    39884406, 39043, 17289, 7420, 20263, 3, 7120, 1543, 63, 38532951,
+    2953546, 403346, 10, 2208, 11938, 155, 4, 976, 14, 39979771,
+    25641295, 39664984, 585935, 12972, 108, 36)
+
+
+@dataclasses.dataclass(frozen=True)
+class RecsysConfig:
+    name: str
+    interaction: str                  # 'fm' | 'cin' | 'dot' | 'self-attn-seq'
+    n_sparse: int = 39
+    embed_dim: int = 10
+    n_dense: int = 0
+    table_rows: tuple[int, ...] = ()  # per-feature cardinality (len n_sparse)
+    bot_mlp: tuple[int, ...] = ()
+    top_mlp: tuple[int, ...] = ()
+    cin_layers: tuple[int, ...] = ()
+    # sasrec
+    seq_len: int = 50
+    n_blocks: int = 2
+    n_heads: int = 1
+    n_items: int = 0
+    dtype: Any = jnp.float32
+
+    def rows(self) -> tuple[int, ...]:
+        """Per-feature cardinalities, padded to 512-row multiples so table
+        rows divide the (pod, data) mesh axes for row-sharding (hash-bucket
+        semantics are unchanged — pad rows are never addressed)."""
+        base = self.table_rows or tuple([1_000_000] * self.n_sparse)
+        return tuple(-(-r // 512) * 512 for r in base)
+
+
+# ---------------------------------------------------------------------------
+# EmbeddingBag (take + segment_sum) — the JAX-native implementation
+# ---------------------------------------------------------------------------
+
+def embedding_bag(table: jnp.ndarray, ids: jnp.ndarray, offsets: jnp.ndarray,
+                  n_bags: int) -> jnp.ndarray:
+    """sum-mode EmbeddingBag: ids (L,) flat indices, offsets (n_bags,) starts."""
+    bags = jnp.searchsorted(offsets, jnp.arange(ids.shape[0]), side="right") - 1
+    vecs = jnp.take(table, ids, axis=0)
+    return jax.ops.segment_sum(vecs, bags, num_segments=n_bags)
+
+
+def _mlp_init(key, dims, dtype):
+    ks = jax.random.split(key, len(dims) - 1)
+    return [L.init_dense(k, i, o, dtype) for k, i, o in zip(ks, dims[:-1], dims[1:])]
+
+
+def _mlp(ws, x, act=jax.nn.relu, final_act=False):
+    for i, w in enumerate(ws):
+        x = x @ w
+        if i < len(ws) - 1 or final_act:
+            x = act(x)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# parameter init / specs
+# ---------------------------------------------------------------------------
+
+def init_params(key, cfg: RecsysConfig) -> dict:
+    keys = jax.random.split(key, 8)
+    p: dict = {}
+    if cfg.interaction == "self-attn-seq":
+        d = cfg.embed_dim
+        p["item_emb"] = (jax.random.normal(keys[0], (cfg.n_items, d)) * 0.02
+                         ).astype(cfg.dtype)
+        p["pos_emb"] = (jax.random.normal(keys[1], (cfg.seq_len, d)) * 0.02
+                        ).astype(cfg.dtype)
+        blocks = []
+        for b in range(cfg.n_blocks):
+            kb = jax.random.split(keys[2 + b], 6)
+            blocks.append({
+                "wq": L.init_dense(kb[0], d, d, cfg.dtype),
+                "wk": L.init_dense(kb[1], d, d, cfg.dtype),
+                "wv": L.init_dense(kb[2], d, d, cfg.dtype),
+                "wo": L.init_dense(kb[3], d, d, cfg.dtype),
+                "ff1": L.init_dense(kb[4], d, d, cfg.dtype),
+                "ff2": L.init_dense(kb[5], d, d, cfg.dtype),
+                "norm1": jnp.zeros((d,), cfg.dtype),
+                "norm2": jnp.zeros((d,), cfg.dtype),
+            })
+        p["blocks"] = blocks
+        return p
+
+    # tabular towers: one table per sparse feature
+    tkeys = jax.random.split(keys[0], cfg.n_sparse)
+    p["tables"] = [
+        (jax.random.normal(k, (rows, cfg.embed_dim)) * (1.0 / cfg.embed_dim) ** 0.5
+         ).astype(cfg.dtype)
+        for k, rows in zip(tkeys, cfg.rows())]
+    if cfg.interaction == "fm":
+        lkeys = jax.random.split(keys[1], cfg.n_sparse)
+        p["linear"] = [(jax.random.normal(k, (rows, 1)) * 0.01).astype(cfg.dtype)
+                       for k, rows in zip(lkeys, cfg.rows())]
+        p["bias"] = jnp.zeros((), cfg.dtype)
+    if cfg.bot_mlp:
+        p["bot"] = _mlp_init(keys[2], (cfg.n_dense,) + cfg.bot_mlp, cfg.dtype)
+    if cfg.interaction == "cin":
+        dims = (cfg.n_sparse,) + cfg.cin_layers
+        ckeys = jax.random.split(keys[3], len(cfg.cin_layers))
+        p["cin"] = [
+            (jax.random.normal(k, (dims[i + 1], dims[i], cfg.n_sparse))
+             * (1.0 / (dims[i] * cfg.n_sparse)) ** 0.5).astype(cfg.dtype)
+            for i, k in enumerate(ckeys)]
+        # DNN branch of xDeepFM
+        p["dnn"] = _mlp_init(keys[4], (cfg.n_sparse * cfg.embed_dim, 400, 400),
+                             cfg.dtype)
+        p["out"] = L.init_dense(keys[5], sum(cfg.cin_layers) + 400 + 1, 1, cfg.dtype)
+        p["linear_w"] = _mlp_init(keys[6], (cfg.n_sparse * cfg.embed_dim, 1), cfg.dtype)
+    if cfg.interaction == "dot":
+        n_f = cfg.n_sparse + 1
+        n_inter = n_f * (n_f - 1) // 2
+        p["top"] = _mlp_init(keys[3], (cfg.bot_mlp[-1] + n_inter,) + cfg.top_mlp,
+                             cfg.dtype)
+    return p
+
+
+def param_specs(cfg: RecsysConfig, rules: L.MeshRules):
+    shapes = jax.eval_shape(lambda k: init_params(k, cfg), jax.random.PRNGKey(0))
+
+    def spec_for(path, leaf):
+        keys = [getattr(k, "key", getattr(k, "idx", None)) for k in path]
+        if "tables" in keys or "linear" in keys or "item_emb" in keys:
+            if leaf.shape[0] >= 100_000:      # big tables: row-shard
+                return rules.spec("rows", None)
+            return jax.sharding.PartitionSpec()
+        return jax.sharding.PartitionSpec()   # towers are tiny: replicate
+
+    return jax.tree_util.tree_map_with_path(spec_for, shapes)
+
+
+# ---------------------------------------------------------------------------
+# interactions
+# ---------------------------------------------------------------------------
+
+def fm_interaction(v: jnp.ndarray) -> jnp.ndarray:
+    """v (B, F, d): 0.5 * ((sum_i v_i)^2 - sum_i v_i^2), summed over d.
+    The O(F d) sum-square trick (Rendle ICDM'10)."""
+    s = jnp.sum(v, axis=1)
+    s2 = jnp.sum(v * v, axis=1)
+    return 0.5 * jnp.sum(s * s - s2, axis=-1, keepdims=True)
+
+
+def dot_interaction(v: jnp.ndarray) -> jnp.ndarray:
+    """v (B, F, d): all pairwise dots, lower triangle flattened (DLRM)."""
+    g = jnp.einsum("bfd,bgd->bfg", v, v)
+    f = v.shape[1]
+    iu, ju = jnp.tril_indices(f, k=-1)
+    return g[:, iu, ju]
+
+
+def cin_layers_apply(ws, x0: jnp.ndarray) -> jnp.ndarray:
+    """Compressed Interaction Network (xDeepFM eq. 6): x^{k+1}_h = sum_{ij}
+    W_{h,i,j} (x^k_i * x^0_j); sum-pool each level over d."""
+    xk = x0
+    pooled = []
+    for w in ws:
+        z = jnp.einsum("bhd,bmd->bhmd", xk, x0)
+        xk = jnp.einsum("bhmd,nhm->bnd", z, w)
+        pooled.append(jnp.sum(xk, axis=-1))
+    return jnp.concatenate(pooled, axis=-1)    # (B, sum(H_k))
+
+
+# ---------------------------------------------------------------------------
+# forward / loss
+# ---------------------------------------------------------------------------
+
+def _lookup(tables: Sequence[jnp.ndarray], sparse_ids: jnp.ndarray,
+            rules: L.MeshRules) -> jnp.ndarray:
+    """sparse_ids (B, F) -> (B, F, d).  One gather per table (sizes differ)."""
+    outs = []
+    for f, t in enumerate(tables):
+        ids = jnp.clip(sparse_ids[:, f], 0, t.shape[0] - 1)
+        outs.append(jnp.take(t, ids, axis=0))
+    v = jnp.stack(outs, axis=1)
+    return L.constrain(v, rules, "batch", None, None)
+
+
+def forward(params: dict, batch: dict, cfg: RecsysConfig,
+            rules: L.MeshRules) -> jnp.ndarray:
+    """Returns CTR logits (B,) for tabular towers, or (B, S, d) hidden states
+    for SASRec (scored against item embeddings by the callers)."""
+    if cfg.interaction == "self-attn-seq":
+        return _sasrec_forward(params, batch["seq"], cfg, rules)
+
+    v = _lookup(params["tables"], batch["sparse"], rules)      # (B, F, d)
+    if cfg.interaction == "fm":
+        lin = sum(jnp.take(t, jnp.clip(batch["sparse"][:, f], 0, t.shape[0] - 1),
+                           axis=0)
+                  for f, t in enumerate(params["linear"]))     # (B, 1)
+        return (fm_interaction(v) + lin + params["bias"])[:, 0]
+    if cfg.interaction == "cin":
+        cin_out = cin_layers_apply(params["cin"], v)
+        flat = v.reshape(v.shape[0], -1)
+        dnn_out = _mlp(params["dnn"], flat, final_act=True)
+        lin = _mlp(params["linear_w"], flat)
+        out = jnp.concatenate([cin_out, dnn_out, lin], axis=-1)
+        return _mlp([params["out"]], out)[:, 0]
+    if cfg.interaction == "dot":
+        dense = _mlp(params["bot"], batch["dense"].astype(cfg.dtype),
+                     final_act=True)                           # (B, d)
+        feats = jnp.concatenate([dense[:, None, :], v], axis=1)
+        inter = dot_interaction(feats)
+        top_in = jnp.concatenate([dense, inter], axis=-1)
+        return _mlp(params["top"], top_in)[:, 0]
+    raise ValueError(cfg.interaction)
+
+
+def _sasrec_forward(params, seq, cfg: RecsysConfig, rules: L.MeshRules):
+    """seq (B, S) item ids -> (B, S, d) hidden states (causal self-attn)."""
+    B, S = seq.shape
+    d = cfg.embed_dim
+    h = jnp.take(params["item_emb"], jnp.clip(seq, 0, cfg.n_items - 1), axis=0)
+    h = h * jnp.sqrt(float(d)).astype(h.dtype) + params["pos_emb"][None, :S]
+    mask = jnp.tril(jnp.ones((S, S), bool))
+    for blk in params["blocks"]:
+        q = L.rms_norm(h, blk["norm1"])
+        att = jnp.einsum("bqd,bkd->bqk", q @ blk["wq"], q @ blk["wk"])
+        att = att / jnp.sqrt(float(d))
+        att = jnp.where(mask[None], att.astype(jnp.float32), -1e30)
+        w = jax.nn.softmax(att, axis=-1).astype(h.dtype)
+        h = h + (jnp.einsum("bqk,bkd->bqd", w, q @ blk["wv"]) @ blk["wo"])
+        f = L.rms_norm(h, blk["norm2"])
+        h = h + jax.nn.relu(f @ blk["ff1"]) @ blk["ff2"]
+    return h
+
+
+def loss_fn(params, batch, cfg: RecsysConfig, rules: L.MeshRules):
+    if cfg.interaction == "self-attn-seq":
+        h = _sasrec_forward(params, batch["seq"], cfg, rules)     # (B, S, d)
+        pos_v = jnp.take(params["item_emb"],
+                         jnp.clip(batch["pos"], 0, cfg.n_items - 1), axis=0)
+        neg_v = jnp.take(params["item_emb"],
+                         jnp.clip(batch["neg"], 0, cfg.n_items - 1), axis=0)
+        s_pos = jnp.sum(h * pos_v, axis=-1).astype(jnp.float32)
+        s_neg = jnp.sum(h * neg_v, axis=-1).astype(jnp.float32)
+        m = (batch["pos"] > 0).astype(jnp.float32)
+        # SASRec BCE: positive vs one sampled negative per step
+        nll = -(jax.nn.log_sigmoid(s_pos) + jax.nn.log_sigmoid(-s_neg)) * m
+        loss = jnp.sum(nll) / jnp.maximum(jnp.sum(m), 1.0)
+        return loss, {"nll": loss}
+    logits = forward(params, batch, cfg, rules).astype(jnp.float32)
+    y = batch["label"].astype(jnp.float32)
+    loss = jnp.mean(-(y * jax.nn.log_sigmoid(logits)
+                      + (1 - y) * jax.nn.log_sigmoid(-logits)))
+    return loss, {"nll": loss}
+
+
+def serve(params, batch, cfg: RecsysConfig, rules: L.MeshRules):
+    """Online/offline scoring: sigmoid CTR (tabular) / next-item hidden (seq)."""
+    if cfg.interaction == "self-attn-seq":
+        h = _sasrec_forward(params, batch["seq"], cfg, rules)
+        return h[:, -1, :]                    # (B, d) user state
+    return jax.nn.sigmoid(forward(params, batch, cfg, rules))
+
+
+def retrieval_scores(params, batch, cfg: RecsysConfig, rules: L.MeshRules,
+                     k: int = 100):
+    """Score 1 query against n_candidates, return top-k (ANN-free exact).
+
+    SASRec: one matvec of the user state against candidate item embeddings.
+    Tabular: batched tower evaluation with the candidate id substituted into
+    sparse slot 0 (the item slot), user features broadcast.
+    """
+    if cfg.interaction == "self-attn-seq":
+        h = _sasrec_forward(params, batch["seq"], cfg, rules)[:, -1, :]  # (1, d)
+        cands = jnp.take(params["item_emb"],
+                         jnp.clip(batch["candidates"], 0, cfg.n_items - 1), axis=0)
+        scores = (cands @ h[0]).astype(jnp.float32)
+        return jax.lax.top_k(scores, k)
+    C = batch["candidates"].shape[0]
+    sparse = jnp.broadcast_to(batch["sparse"], (C, cfg.n_sparse)).at[:, 0].set(
+        batch["candidates"])
+    b = {"sparse": sparse}
+    if cfg.n_dense and "dense" in batch:
+        b["dense"] = jnp.broadcast_to(batch["dense"], (C, cfg.n_dense))
+    scores = forward(params, b, cfg, rules).astype(jnp.float32)
+    return jax.lax.top_k(scores, k)

@@ -1,0 +1,297 @@
+"""Decoder-only LM: GQA / MoE / alternating attention patterns, scan-stacked.
+
+The repeating unit is the *layer group* = ``cfg.pattern`` (e.g. Gemma-2:
+('local','global'); Llama-4: ('chunked','chunked','chunked','global') with
+NoPE on the global layers).  Parameters are stacked per group position with a
+leading (n_groups,) axis and the stack is driven by one ``lax.scan`` — one
+trace per group position regardless of depth, which keeps HLO size and compile
+time flat for 94-layer configs and gives remat a natural boundary.
+
+Three entry points per the dry-run contract:
+  train_step(params, opt_state, batch, ...)      (train_* shapes)
+  prefill(params, tokens)                        (prefill_* shapes)
+  decode_step(params, caches, tokens, cache_len) (decode_* / long_* shapes)
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as A
+from repro.models import layers as L
+from repro.models import moe as M
+
+
+@dataclasses.dataclass(frozen=True)
+class LMConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    d_head: int | None = None            # default d_model // n_heads
+    pattern: tuple[str, ...] = ("global",)
+    use_rope_pattern: tuple[bool, ...] = (True,)
+    window: int = 0
+    attn_softcap: float | None = None
+    final_softcap: float | None = None
+    post_norms: bool = False             # Gemma-2 post-block norms
+    qk_norm: bool = False
+    rope_theta: float = 10000.0
+    moe: M.MoEConfig | None = None
+    dtype: Any = jnp.bfloat16
+    remat: bool = True
+    aux_loss_weight: float = 0.01
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_head or self.d_model // self.n_heads
+
+    @property
+    def n_groups(self) -> int:
+        assert self.n_layers % len(self.pattern) == 0
+        return self.n_layers // len(self.pattern)
+
+    def attn_cfg(self) -> A.AttnConfig:
+        return A.AttnConfig(n_heads=self.n_heads, n_kv_heads=self.n_kv_heads,
+                            d_head=self.head_dim, qk_norm=self.qk_norm,
+                            softcap=self.attn_softcap, rope_theta=self.rope_theta,
+                            window=self.window)
+
+    def param_count(self) -> int:
+        """Analytic parameter count (roofline MODEL_FLOPS uses this)."""
+        D, V, Dh = self.d_model, self.vocab, self.head_dim
+        attn = D * Dh * (self.n_heads * 2 + self.n_kv_heads * 2)
+        if self.moe:
+            ffn = (self.moe.n_experts * 3 * D * self.moe.d_ff
+                   + D * self.moe.n_experts
+                   + (3 * D * self.moe.d_ff * self.moe.n_shared))
+        else:
+            ffn = 3 * D * self.d_ff
+        return self.n_layers * (attn + ffn) + 2 * V * D
+
+    def active_param_count(self) -> int:
+        """MoE: params touched per token (6·N_active·D FLOPs convention)."""
+        if not self.moe:
+            return self.param_count()
+        D, V = self.d_model, self.vocab
+        Dh = self.head_dim
+        attn = D * Dh * (self.n_heads * 2 + self.n_kv_heads * 2)
+        ffn = (self.moe.top_k + self.moe.n_shared) * 3 * D * self.moe.d_ff
+        return self.n_layers * (attn + ffn) + 2 * V * D
+
+
+# ---------------------------------------------------------------------------
+# parameters
+# ---------------------------------------------------------------------------
+
+def _init_block(key, cfg: LMConfig, dtype) -> dict:
+    ka, kf = jax.random.split(key)
+    p = {
+        "attn": A.init_attn(ka, cfg.d_model, cfg.attn_cfg(), dtype),
+        "norm1": jnp.zeros((cfg.d_model,), dtype),
+        "norm2": jnp.zeros((cfg.d_model,), dtype),
+    }
+    if cfg.post_norms:
+        p["norm1_post"] = jnp.zeros((cfg.d_model,), dtype)
+        p["norm2_post"] = jnp.zeros((cfg.d_model,), dtype)
+    if cfg.moe:
+        p["moe"] = M.init_moe(kf, cfg.d_model, cfg.moe, dtype)
+    else:
+        ks = jax.random.split(kf, 3)
+        p["mlp"] = {
+            "wi_gate": L.init_dense(ks[0], cfg.d_model, cfg.d_ff, dtype),
+            "wi_up": L.init_dense(ks[1], cfg.d_model, cfg.d_ff, dtype),
+            "wo": L.init_dense(ks[2], cfg.d_ff, cfg.d_model, dtype),
+        }
+    return p
+
+
+def init_params(key, cfg: LMConfig) -> dict:
+    dtype = cfg.dtype
+    keys = jax.random.split(key, 3 + len(cfg.pattern))
+    stacked = []
+    for i in range(len(cfg.pattern)):
+        gkeys = jax.random.split(keys[i], cfg.n_groups)
+        stacked.append(jax.vmap(lambda k: _init_block(k, cfg, dtype))(gkeys))
+    emb = (jax.random.normal(keys[-3], (cfg.vocab, cfg.d_model)) * 0.02).astype(dtype)
+    head = (jax.random.normal(keys[-2], (cfg.vocab, cfg.d_model)) * 0.02).astype(dtype)
+    return {
+        "embed": emb,
+        "blocks": stacked,                  # list over group positions
+        "final_norm": jnp.zeros((cfg.d_model,), dtype),
+        "lm_head": head,                    # (V, D), used transposed
+    }
+
+
+def param_specs(cfg: LMConfig, rules: L.MeshRules):
+    """PartitionSpec pytree matching init_params (FSDP+TP; DESIGN.md §4)."""
+    def attn_spec():
+        s = {"wq": rules.spec("embed", "heads"), "wk": rules.spec("embed", "heads"),
+             "wv": rules.spec("embed", "heads"), "wo": rules.spec("heads", "embed")}
+        if cfg.qk_norm:
+            s["q_norm"] = rules.spec(None)
+            s["k_norm"] = rules.spec(None)
+        return s
+
+    def block_spec():
+        p = {"attn": attn_spec(),
+             "norm1": rules.spec(None), "norm2": rules.spec(None)}
+        if cfg.post_norms:
+            p["norm1_post"] = rules.spec(None)
+            p["norm2_post"] = rules.spec(None)
+        if cfg.moe:
+            p["moe"] = {
+                "router": rules.spec("embed", "experts"),
+                "wi_gate": rules.spec("experts", "batch", None),
+                "wi_up": rules.spec("experts", "batch", None),
+                "wo": rules.spec("experts", None, "batch"),
+            }
+            if cfg.moe.n_shared:
+                p["moe"]["shared"] = {
+                    "wi_gate": rules.spec("embed", "mlp"),
+                    "wi_up": rules.spec("embed", "mlp"),
+                    "wo": rules.spec("mlp", "embed"),
+                }
+        else:
+            p["mlp"] = {"wi_gate": rules.spec("embed", "mlp"),
+                        "wi_up": rules.spec("embed", "mlp"),
+                        "wo": rules.spec("mlp", "embed")}
+        return p
+
+    def stack(spec):
+        # prepend the scanned (n_groups,) axis
+        return jax.tree.map(lambda s: jax.sharding.PartitionSpec(None, *s), spec)
+
+    return {
+        "embed": rules.spec("vocab", "embed"),
+        "blocks": [stack(block_spec()) for _ in cfg.pattern],
+        "final_norm": rules.spec(None),
+        "lm_head": rules.spec("vocab", "embed"),
+    }
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+def _block_apply(p: dict, x: jnp.ndarray, cfg: LMConfig, pattern: str,
+                 use_rope: bool, rules: L.MeshRules,
+                 kv_cache=None, cache_len=None):
+    pat_id = jnp.int32(A.PATTERNS.index(pattern))
+    h = L.rms_norm(x, p["norm1"])
+    attn_out, new_kv = A.attend(p["attn"], h, cfg.attn_cfg(), pat_id,
+                                rules=rules, use_rope=use_rope,
+                                kv_cache=kv_cache, cache_len=cache_len)
+    if cfg.post_norms:
+        attn_out = L.rms_norm(attn_out, p["norm1_post"])
+    x = x + attn_out
+    h = L.rms_norm(x, p["norm2"])
+    aux = jnp.float32(0.0)
+    if cfg.moe:
+        B, S, D = h.shape
+        out, aux = M.moe_apply(p["moe"], h.reshape(B * S, D), cfg.moe, rules)
+        out = out.reshape(B, S, D)
+    else:
+        out = L.mlp_apply(p["mlp"], h)
+    if cfg.post_norms:
+        out = L.rms_norm(out, p["norm2_post"])
+    return x + out, new_kv, aux
+
+
+def forward(params: dict, tokens: jnp.ndarray, cfg: LMConfig,
+            rules: L.MeshRules, collect_cache: bool = False):
+    """tokens (B, S) -> logits (B, S, V) [+ caches].  Scan over layer groups."""
+    x = params["embed"][tokens].astype(cfg.dtype) * jnp.sqrt(float(cfg.d_model)).astype(cfg.dtype)
+    x = L.constrain(x, rules, "batch", "seq", "embed")
+
+    def group_body(carry, group_params):
+        x, aux = carry
+        # pin the carry's sharding each group: scan transposition otherwise
+        # loses it in the backward pass (replicated cotangents)
+        x = L.constrain(x, rules, "batch", "seq", "embed")
+        caches = []
+        for i, pat in enumerate(cfg.pattern):
+            x, kv, a = _block_apply(group_params[i], x, cfg, pat,
+                                    cfg.use_rope_pattern[i], rules)
+            aux = aux + a
+            if collect_cache:
+                caches.append(kv)
+        return (x, aux), (tuple(caches) if collect_cache else None)
+
+    body = group_body
+    if cfg.remat:
+        body = jax.checkpoint(group_body,
+                              policy=jax.checkpoint_policies.nothing_saveable)
+    (x, aux), caches = jax.lax.scan(body, (x, jnp.float32(0.0)), params["blocks"])
+    x = L.rms_norm(x, params["final_norm"])
+    logits = x @ params["lm_head"].T.astype(cfg.dtype)
+    logits = L.softcap(logits.astype(jnp.float32), cfg.final_softcap)
+    # vocab-parallel logits: S deliberately unsharded here so the constraint
+    # stays valid under sequence-parallel rules (seq and vocab both map to
+    # 'model'; a (batch, seq, vocab) spec would be dropped as duplicate and
+    # leave 12+ GB/chip of replicated fp32 logits — §Perf hillclimb 2).
+    logits = L.constrain(logits, rules, "batch", None, "vocab")
+    return (logits, aux, caches) if collect_cache else (logits, aux)
+
+
+def loss_fn(params, batch, cfg: LMConfig, rules: L.MeshRules):
+    logits, aux = forward(params, batch["tokens"], cfg, rules)
+    nll = L.cross_entropy(logits, batch["labels"])
+    return nll + cfg.aux_loss_weight * aux, {"nll": nll, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+
+def cache_shapes(cfg: LMConfig, batch: int, max_len: int) -> list:
+    """Per group position: (n_groups, B, S_kv, KV, Dh) k/v pairs.  Local and
+    chunked layers get window-sized ring buffers — the sub-quadratic memory
+    path for long_500k (DESIGN.md §5)."""
+    out = []
+    for pat in cfg.pattern:
+        s_kv = max_len if pat == "global" or cfg.window == 0 else min(cfg.window, max_len)
+        shp = (cfg.n_groups, batch, s_kv, cfg.n_kv_heads, cfg.head_dim)
+        out.append((jax.ShapeDtypeStruct(shp, cfg.dtype),
+                    jax.ShapeDtypeStruct(shp, cfg.dtype)))
+    return out
+
+
+def init_cache(cfg: LMConfig, batch: int, max_len: int) -> list:
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                        cache_shapes(cfg, batch, max_len))
+
+
+def decode_step(params: dict, caches: list, tokens: jnp.ndarray,
+                cache_len: jnp.ndarray, cfg: LMConfig, rules: L.MeshRules):
+    """One decode step: tokens (B,) -> logits (B, V), updated caches."""
+    x = params["embed"][tokens[:, None]].astype(cfg.dtype) * jnp.sqrt(float(cfg.d_model)).astype(cfg.dtype)
+
+    def group_body(x, scanned):
+        group_params, group_caches = scanned
+        new_caches = []
+        for i, pat in enumerate(cfg.pattern):
+            x, kv, _ = _block_apply(group_params[i], x, cfg, pat,
+                                    cfg.use_rope_pattern[i], rules,
+                                    kv_cache=group_caches[i], cache_len=cache_len)
+            new_caches.append(kv)
+        return x, tuple(new_caches)
+
+    x, new_caches = jax.lax.scan(group_body, x, (params["blocks"], caches))
+    x = L.rms_norm(x, params["final_norm"])
+    logits = x[:, 0, :] @ params["lm_head"].T.astype(cfg.dtype)
+    logits = L.softcap(logits.astype(jnp.float32), cfg.final_softcap)
+    return logits, list(new_caches)
+
+
+def prefill(params: dict, tokens: jnp.ndarray, cfg: LMConfig, rules: L.MeshRules):
+    """Prefill: full forward returning logits + caches for subsequent decode."""
+    logits, _, caches = forward(params, tokens, cfg, rules, collect_cache=True)
+    return logits, caches

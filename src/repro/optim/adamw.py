@@ -1,0 +1,134 @@
+"""AdamW with FSDP-sharded states, global-norm clipping, cosine schedule, and
+optional error-feedback int8 gradient compression for the cross-pod axis.
+
+Self-contained (no optax dependency in this container).  Optimizer state
+mirrors parameter sharding exactly — m/v PartitionSpecs are the parameter
+specs, so pjit never replicates the 2x fp32 state.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray
+    m: Any
+    v: Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+
+
+def init_state(params) -> AdamWState:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return AdamWState(step=jnp.zeros((), jnp.int32),
+                      m=jax.tree.map(zeros, params),
+                      v=jax.tree.map(zeros, params))
+
+
+def state_specs(param_specs) -> AdamWState:
+    """Optimizer-state PartitionSpecs = parameter specs (FSDP)."""
+    from jax.sharding import PartitionSpec as P
+    return AdamWState(step=P(), m=param_specs, v=param_specs)
+
+
+def schedule(cfg: AdamWConfig, step: jnp.ndarray) -> jnp.ndarray:
+    warm = jnp.minimum(step.astype(jnp.float32) / max(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    frac = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * cos
+    return cfg.lr * warm * frac
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale), grads), norm
+
+
+def apply_updates(params, state: AdamWState, grads, cfg: AdamWConfig):
+    """One AdamW step.  Returns (new_params, new_state, metrics)."""
+    grads, gnorm = clip_by_global_norm(grads, cfg.clip_norm)
+    step = state.step + 1
+    lr = schedule(cfg, step)
+    b1, b2 = cfg.b1, cfg.b2
+
+    def upd(p, m, v, g):
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * jnp.square(g)
+        mh = m / (1 - b1 ** step.astype(jnp.float32))
+        vh = v / (1 - b2 ** step.astype(jnp.float32))
+        delta = mh / (jnp.sqrt(vh) + cfg.eps) + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m, v
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_m = jax.tree.leaves(state.m)
+    flat_v = jax.tree.leaves(state.v)
+    flat_g = jax.tree.leaves(grads)
+    new_p, new_m, new_v = [], [], []
+    for p, m, v, g in zip(flat_p, flat_m, flat_v, flat_g):
+        a, b, c = upd(p, m, v, g)
+        new_p.append(a); new_m.append(b); new_v.append(c)
+    return (jax.tree.unflatten(treedef, new_p),
+            AdamWState(step=step,
+                       m=jax.tree.unflatten(treedef, new_m),
+                       v=jax.tree.unflatten(treedef, new_v)),
+            {"grad_norm": gnorm, "lr": lr})
+
+
+# ---------------------------------------------------------------------------
+# error-feedback int8 gradient compression (cross-pod / DCN axis)
+# ---------------------------------------------------------------------------
+
+class EFState(NamedTuple):
+    residual: Any   # fp32 error accumulator, same tree as grads
+
+
+def ef_init(params) -> EFState:
+    return EFState(residual=jax.tree.map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params))
+
+
+def compress_decompress(g: jnp.ndarray, r: jnp.ndarray):
+    """Simulate int8 quantize -> (all-reduce) -> dequantize with error feedback.
+
+    Returns (dequantized gradient, new residual).  On real multi-pod meshes the
+    quantized payload is what crosses the DCN; the residual keeps the scheme
+    unbiased over time (EF-SGD).  8x smaller cross-pod all-reduce payload.
+    """
+    x = g.astype(jnp.float32) + r
+    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    deq = q.astype(jnp.float32) * scale
+    return deq, x - deq
+
+
+def ef_compress_tree(grads, ef: EFState):
+    pairs = jax.tree.map(compress_decompress, grads, ef.residual)
+    deq = jax.tree.map(lambda p: p[0], pairs,
+                       is_leaf=lambda x: isinstance(x, tuple))
+    res = jax.tree.map(lambda p: p[1], pairs,
+                       is_leaf=lambda x: isinstance(x, tuple))
+    return deq, EFState(residual=res)

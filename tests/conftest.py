@@ -1,0 +1,30 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS here — tests must see 1 CPU device
+(the 512-device override belongs exclusively to launch/dryrun.py)."""
+import numpy as np
+import pytest
+
+from repro.core import drb, scoring, wtbc
+from repro.text import corpus
+
+
+@pytest.fixture(scope="session")
+def small_corpus():
+    return corpus.make_corpus(n_docs=120, mean_doc_len=60, vocab_size=500, seed=3)
+
+
+@pytest.fixture(scope="session")
+def small_index(small_corpus):
+    idx, model = wtbc.build_index(small_corpus.doc_tokens,
+                                  small_corpus.vocab_size, block=512)
+    return idx, model
+
+
+@pytest.fixture(scope="session")
+def small_aux(small_index, small_corpus):
+    idx, model = small_index
+    return drb.build_aux(idx, model, small_corpus.doc_tokens, eps=1e-6)
+
+
+@pytest.fixture(scope="session")
+def tfidf():
+    return scoring.TfIdf()

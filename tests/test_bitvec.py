@@ -1,0 +1,35 @@
+"""Packed bitvector rank1/select1 vs oracles (property-based)."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import bitvec
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(1, 20000), st.floats(0.0, 1.0))
+def test_rank1_select1(seed, n_bits, density):
+    rng = np.random.default_rng(seed)
+    n_set = int(n_bits * density)
+    set_bits = np.sort(rng.choice(n_bits, size=min(n_set, n_bits), replace=False))
+    bv = bitvec.build(set_bits, n_bits)
+    for _ in range(8):
+        p = int(rng.integers(0, n_bits + 1))
+        assert int(bitvec.rank1(bv, jnp.int32(p))) == bitvec.rank1_np(set_bits, p)
+    total = len(set_bits)
+    for j in ([1, total // 2, total, total + 1] if total else [1]):
+        if j < 1:
+            continue
+        assert int(bitvec.select1(bv, jnp.int32(j))) == \
+            bitvec.select1_np(set_bits, j, n_bits)
+
+
+def test_word_boundaries():
+    # bits exactly at 32-bit word and 1024-bit block boundaries
+    set_bits = np.array([0, 31, 32, 1023, 1024, 2047])
+    bv = bitvec.build(set_bits, 2048)
+    assert int(bitvec.rank1(bv, jnp.int32(32))) == 2
+    assert int(bitvec.rank1(bv, jnp.int32(33))) == 3
+    assert int(bitvec.rank1(bv, jnp.int32(1024))) == 4
+    assert int(bitvec.select1(bv, jnp.int32(5))) == 1024
+    assert int(bitvec.select1(bv, jnp.int32(6))) == 2047

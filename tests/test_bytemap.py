@@ -1,0 +1,58 @@
+"""bytemap rank/select vs numpy oracles (property-based)."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import bytemap
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(1, 5000),
+       st.sampled_from([256, 512, 2048]))
+def test_rank_matches_oracle(seed, n, block):
+    rng = np.random.default_rng(seed)
+    data = rng.integers(0, 256, n).astype(np.uint8)
+    bm = bytemap.build(data, block=block)
+    for _ in range(10):
+        b = int(rng.integers(0, 256))
+        p = int(rng.integers(0, n + 1))
+        assert int(bytemap.rank(bm, jnp.uint8(b), jnp.int32(p))) == \
+            bytemap.rank_np(data, b, p)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(1, 4000),
+       st.sampled_from([256, 1024]))
+def test_select_matches_oracle(seed, n, block):
+    rng = np.random.default_rng(seed)
+    # low-entropy alphabet => many repeats per byte value
+    data = rng.integers(0, 7, n).astype(np.uint8)
+    bm = bytemap.build(data, block=block)
+    for _ in range(10):
+        b = int(rng.integers(0, 8))
+        occ = int((data == b).sum())
+        j = int(rng.integers(1, occ + 2)) if occ else 1
+        assert int(bytemap.select(bm, jnp.uint8(b), jnp.int32(j))) == \
+            bytemap.select_np(data, b, j)
+
+
+def test_rank_select_inverse():
+    rng = np.random.default_rng(4)
+    data = rng.integers(0, 3, 3000).astype(np.uint8)
+    bm = bytemap.build(data, block=256)
+    for b in range(3):
+        occ = int((data == b).sum())
+        for j in [1, occ // 2, occ]:
+            if j < 1:
+                continue
+            p = int(bytemap.select(bm, jnp.uint8(b), jnp.int32(j)))
+            assert int(bytemap.rank(bm, jnp.uint8(b), jnp.int32(p + 1))) == j
+            assert data[p] == b
+
+
+def test_count_range_edges():
+    data = np.array([5, 5, 1, 5], np.uint8)
+    bm = bytemap.build(data, block=256)
+    assert int(bytemap.count_range(bm, jnp.uint8(5), jnp.int32(0), jnp.int32(4))) == 3
+    assert int(bytemap.count_range(bm, jnp.uint8(5), jnp.int32(1), jnp.int32(1))) == 0
+    assert int(bytemap.count_range(bm, jnp.uint8(9), jnp.int32(0), jnp.int32(4))) == 0

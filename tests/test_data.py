@@ -1,0 +1,71 @@
+"""Data pipeline: determinism (restart skip-ahead), sampler validity."""
+import numpy as np
+import pytest
+
+from repro.data import graph_sampler, pipeline
+from repro.models.recsys import RecsysConfig
+from repro.text import corpus, vocab
+
+
+def test_lm_batch_deterministic():
+    a = pipeline.lm_batch(0, 7, 4, 16, 1000)
+    b = pipeline.lm_batch(0, 7, 4, 16, 1000)
+    c = pipeline.lm_batch(0, 8, 4, 16, 1000)
+    np.testing.assert_array_equal(np.asarray(a["tokens"]), np.asarray(b["tokens"]))
+    assert not np.array_equal(np.asarray(a["tokens"]), np.asarray(c["tokens"]))
+    assert np.asarray(a["tokens"]).max() < 1000
+
+
+def test_recsys_batch_bounds():
+    cfg = RecsysConfig(name="x", interaction="dot", n_sparse=4, n_dense=3,
+                       embed_dim=8, table_rows=(100, 200, 50, 1000))
+    b = pipeline.recsys_batch(0, 3, 32, cfg)
+    sp = np.asarray(b["sparse"])
+    rows = cfg.rows()
+    for f in range(4):
+        assert sp[:, f].max() < rows[f]
+    assert b["dense"].shape == (32, 3)
+
+
+def test_graph_sampler_fanout_and_relabel():
+    g = graph_sampler.CSRGraph.random(n_nodes=5000, avg_deg=12, d_feat=16,
+                                      n_classes=5, seed=1)
+    seeds = np.arange(64)
+    sub = graph_sampler.sample_subgraph(g, seeds, fanout=(15, 10),
+                                        pad_nodes=64 * 166, pad_edges=64 * 165,
+                                        seed=2)
+    e = sub["edges"]
+    live = ~((e[:, 0] == 64 * 166 - 1) & (e[:, 1] == 64 * 166 - 1))
+    n_live = int(live.sum())
+    assert 0 < n_live <= 64 * (15 + 15 * 10)
+    assert e.max() < 64 * 166
+    assert sub["label_mask"].sum() == len(seeds)    # loss only on seeds
+
+
+def test_synthetic_corpus_statistics():
+    cp = corpus.make_corpus(n_docs=200, mean_doc_len=50, vocab_size=2000, seed=0)
+    assert cp.n_docs == 200
+    df = cp.doc_freqs()
+    assert df[0] == 200                 # separator in every doc
+    # Zipf skew: top-50 words cover most occurrences
+    freqs = np.zeros(2000, np.int64)
+    for d in cp.doc_tokens:
+        freqs += np.bincount(d, minlength=2000)
+    top = np.sort(freqs)[::-1]
+    assert top[:50].sum() > 0.4 * freqs.sum()
+
+
+def test_vocabulary_roundtrip():
+    docs = [["to", "be", "or", "not", "to", "be"], ["be", "quick"]]
+    v = vocab.Vocabulary.from_documents(docs)
+    enc = v.encode_docs(docs)
+    assert [ [v.words[i] for i in e] for e in enc ] == docs
+    assert v.freqs[v.id_of("be")] == 3
+    assert v.freqs[0] == 2              # one '$' per document
+
+
+def test_fdoc_bands_scale():
+    bands = corpus.fdoc_bands(345_778)
+    assert bands["i"] == (10, 100)
+    small = corpus.fdoc_bands(1000)
+    assert small["i"][0] >= 2 and small["iv"][1] <= 1000

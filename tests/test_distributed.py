@@ -1,0 +1,71 @@
+"""Document-sharded retrieval == single-host results (8 simulated devices).
+
+Runs in a subprocess because XLA's host device count is locked at first jax
+init (the main pytest process must keep seeing 1 CPU device).
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import numpy as np, jax, jax.numpy as jnp
+    from jax.sharding import Mesh
+    from repro.core import wtbc, ranked, drb, scoring, distributed
+    from repro.text import corpus
+
+    cp = corpus.make_corpus(n_docs=96, mean_doc_len=40, vocab_size=300, seed=5)
+    sharded, model = distributed.build_sharded(cp.doc_tokens, cp.vocab_size,
+                                               n_shards=8, block=512)
+    idx, _ = wtbc.build_index(cp.doc_tokens, cp.vocab_size, block=512)
+    measure = scoring.TfIdf()
+    idf = measure.idf(idx)
+    mesh = Mesh(np.array(jax.devices()).reshape(8), ("shards",))
+    rng = np.random.default_rng(11)
+    df = np.asarray(idx.df)
+    pool = np.flatnonzero((df >= 2) & (df <= 50))
+    fails = 0
+    for trial in range(2):
+        ws = rng.choice(pool, size=3, replace=False)
+        words = jnp.asarray(ws, jnp.int32); wmask = jnp.ones(3, bool)
+        for method, conj in [("dr-and", True), ("dr-or", False),
+                             ("drb-and", True), ("drb-or", False)]:
+            bf = ranked.topk_bruteforce(idx, words, wmask, idf, k=10,
+                                        conjunctive=conj)
+            res = distributed.distributed_topk(sharded, words, wmask, k=10,
+                method=method, mesh=mesh, shard_axes="shards", max_df_cap=64)
+            bs = np.sort(np.asarray(bf.scores))[::-1]
+            ds = np.sort(np.asarray(res.scores))[::-1]
+            if not (int(bf.n_found) == int(res.n_found)
+                    and np.allclose(bs, ds, atol=1e-4)):
+                fails += 1
+                print("MISMATCH", method, trial)
+    # batched queries through the same path
+    wsb = jnp.asarray(np.stack([rng.choice(pool, 3, replace=False)
+                                for _ in range(4)]), jnp.int32)
+    res = distributed.distributed_topk(sharded, wsb, jnp.ones((4,3), bool),
+        k=5, method="dr-or", mesh=mesh, shard_axes="shards")
+    assert res.docs.shape == (4, 5), res.docs.shape
+    for b in range(4):
+        bf = ranked.topk_bruteforce(idx, wsb[b], jnp.ones(3, bool), idf,
+                                    k=5, conjunctive=False)
+        if not np.allclose(np.sort(np.asarray(bf.scores)),
+                           np.sort(np.asarray(res.scores[b])), atol=1e-4):
+            fails += 1; print("BATCH MISMATCH", b)
+    print("FAILS", fails)
+    raise SystemExit(1 if fails else 0)
+""")
+
+
+@pytest.mark.slow
+def test_sharded_equals_single_host():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    r = subprocess.run([sys.executable, "-c", SCRIPT], env=env, cwd=
+                       os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                       capture_output=True, text=True, timeout=1200)
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr[-3000:]}"

@@ -1,0 +1,55 @@
+"""Array-heap invariants (the engine under Algorithm 1)."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import heap as H
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.lists(st.floats(-1e6, 1e6, allow_nan=False, allow_subnormal=False,
+                          width=32),
+                min_size=1, max_size=24))
+def test_push_pop_sorts_descending(xs):
+    h = H.make(len(xs) + 4, 1)
+    for i, x in enumerate(xs):
+        h = H.push(h, jnp.float32(x), jnp.array([i], jnp.int32))
+    out = []
+    for _ in range(len(xs)):
+        s, p, h = H.pop(h)
+        out.append(float(s))
+    assert out == sorted(map(np.float32, xs), reverse=True)
+    assert int(h.size) == 0
+
+
+def test_disabled_push_is_noop():
+    h = H.make(8, 1)
+    h = H.push(h, jnp.float32(5.0), jnp.array([1], jnp.int32))
+    h = H.push(h, jnp.float32(9.0), jnp.array([2], jnp.int32), enable=False)
+    assert int(h.size) == 1
+    s, p, h = H.pop(h)
+    assert float(s) == 5.0 and int(p[0]) == 1
+
+
+def test_push_beyond_capacity_drops():
+    h = H.make(2, 1)
+    for i in range(5):
+        h = H.push(h, jnp.float32(i), jnp.array([i], jnp.int32))
+    assert int(h.size) == 2
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.lists(st.tuples(st.floats(-100, 100, allow_nan=False,
+                                    allow_subnormal=False, width=32),
+                          st.integers(0, 1000)), min_size=1, max_size=24),
+       st.integers(1, 8))
+def test_bounded_topk(pairs, k):
+    t = H.topk_make(k)
+    for s, d in pairs:
+        t = H.topk_insert(t, jnp.float32(s), jnp.int32(d))
+    t = H.topk_sorted(t)
+    got = [float(x) for x in t.scores if x > -np.inf]
+    want = sorted([np.float32(s) for s, _ in pairs], reverse=True)[:k]
+    # the bounded structure keeps the k best scores
+    assert got == sorted(want, reverse=True)[: len(got)]
+    assert len(got) == min(k, len(pairs))

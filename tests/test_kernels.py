@@ -1,0 +1,95 @@
+"""Pallas kernels vs ref.py oracles — shape/dtype sweeps, interpret=True."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import bitvec, bytemap
+from repro.kernels import ops, ref
+
+
+@pytest.mark.parametrize("n,block", [(100, 256), (4096, 512), (9000, 512),
+                                     (9000, 4096), (70000, 8192)])
+def test_byte_rank_shapes(n, block):
+    rng = np.random.default_rng(n + block)
+    data = rng.integers(0, 256, n).astype(np.uint8)
+    bm = bytemap.build(data, block=block)
+    B = 17
+    bq = jnp.asarray(rng.integers(0, 256, B), jnp.int32)
+    pq = jnp.asarray(rng.integers(0, n + 1, B), jnp.int32)
+    got = np.asarray(ops.rank_batch(bm, bq, pq))
+    want = np.asarray(ref.byte_rank_ref(bm.data, bm.counts, bm.length, bq, pq,
+                                        block=block))
+    direct = np.array([bytemap.rank_np(data, int(b), int(p))
+                       for b, p in zip(np.asarray(bq), np.asarray(pq))])
+    np.testing.assert_array_equal(got, want)
+    np.testing.assert_array_equal(got, direct)
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(1, 20000))
+def test_byte_rank_property(seed, n):
+    rng = np.random.default_rng(seed)
+    data = rng.integers(0, 8, n).astype(np.uint8)   # dense hits
+    bm = bytemap.build(data, block=512)
+    bq = jnp.asarray(rng.integers(0, 8, 9), jnp.int32)
+    pq = jnp.asarray(rng.integers(0, n + 1, 9), jnp.int32)
+    got = np.asarray(ops.rank_batch(bm, bq, pq))
+    direct = np.array([bytemap.rank_np(data, int(b), int(p))
+                       for b, p in zip(np.asarray(bq), np.asarray(pq))])
+    np.testing.assert_array_equal(got, direct)
+
+
+@pytest.mark.parametrize("n_bits", [100, 1024, 5000, 70000])
+def test_bitmap_rank1(n_bits):
+    rng = np.random.default_rng(n_bits)
+    set_bits = np.unique(rng.integers(0, n_bits, max(1, n_bits // 3)))
+    bv = bitvec.build(set_bits, n_bits)
+    pq = jnp.asarray(rng.integers(0, n_bits + 1, 23), jnp.int32)
+    got = np.asarray(ops.bitmap_rank1_batch(bv, pq))
+    want = np.array([bitvec.rank1_np(set_bits, int(p)) for p in np.asarray(pq)])
+    np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("C,d,k,tile,dtype", [
+    (1000, 128, 5, 256, np.float32),
+    (5000, 128, 10, 512, np.float32),
+    (4096, 256, 16, 1024, np.float32),
+    (3000, 128, 8, 512, np.float16),     # dtype sweep (cast to f32 inside)
+    (1537, 128, 4, 512, np.float32),     # non-multiple of tile (padding path)
+])
+def test_scored_topk(C, d, k, tile, dtype):
+    rng = np.random.default_rng(C + k)
+    cands = rng.standard_normal((C, d)).astype(dtype)
+    q = rng.standard_normal(d).astype(dtype)
+    s_k, i_k = ops.scored_topk(jnp.asarray(cands), jnp.asarray(q), k=k, tile=tile)
+    s_r, i_r = ref.scored_topk_ref(jnp.asarray(cands), jnp.asarray(q), k=k)
+    np.testing.assert_allclose(np.asarray(s_k), np.asarray(s_r), rtol=2e-5,
+                               atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(i_k), np.asarray(i_r))
+
+
+def test_kernel_disable_switch(small_index):
+    """ops.use_kernels(False) routes to the oracle — results identical."""
+    rng = np.random.default_rng(0)
+    data = rng.integers(0, 256, 2000).astype(np.uint8)
+    bm = bytemap.build(data, block=256)
+    bq = jnp.asarray(rng.integers(0, 256, 7), jnp.int32)
+    pq = jnp.asarray(rng.integers(0, 2001, 7), jnp.int32)
+    a = np.asarray(ops.rank_batch(bm, bq, pq))
+    with ops.use_kernels(False):
+        b = np.asarray(ops.rank_batch(bm, bq, pq))
+    np.testing.assert_array_equal(a, b)
+
+
+def test_segment_tf_kernel():
+    rng = np.random.default_rng(5)
+    data = rng.integers(0, 16, 20000).astype(np.uint8)
+    bm = bytemap.build(data, block=1024)
+    bounds = np.sort(rng.choice(20001, size=33, replace=False)).astype(np.int32)
+    for byte in (0, 7, 15):
+        got = np.asarray(ops.segment_tf_batch(bm, jnp.int32(byte),
+                                              jnp.asarray(bounds)))
+        want = np.array([(data[a:b] == byte).sum()
+                         for a, b in zip(bounds[:-1], bounds[1:])])
+        np.testing.assert_array_equal(got, want)

@@ -1,0 +1,157 @@
+"""Per-architecture smoke tests: reduced config, one forward/train step on
+CPU, asserting output shapes and finiteness (the brief's smoke contract).
+The FULL configs are exercised only via launch/dryrun.py (no allocation)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import base, registry
+from repro.configs.lm_common import LM_SHAPES
+from repro.data import pipeline
+from repro.models import transformer as T
+from repro.optim import adamw
+
+RULES = base.make_rules(())          # no mesh on CPU tests
+
+
+def _finite(tree) -> bool:
+    return all(bool(jnp.isfinite(x).all()) for x in jax.tree.leaves(tree)
+               if jnp.issubdtype(x.dtype, jnp.floating))
+
+
+LM_ARCHS = ["qwen3-moe-235b-a22b", "llama4-scout-17b-a16e", "gemma2-9b",
+            "qwen3-1.7b", "granite-3-8b"]
+
+
+@pytest.mark.parametrize("name", LM_ARCHS)
+def test_lm_train_smoke(name):
+    arch = registry.get(name)
+    cfg = arch.config(smoke=True)
+    params = arch.init_params(jax.random.PRNGKey(0), cfg)
+    opt = adamw.init_state(params)
+    step = arch.make_step(cfg, "train", RULES)
+    batch = pipeline.lm_batch(0, 0, batch=2, seq=16, vocab=cfg.vocab)
+    params2, opt2, metrics = step(params, opt, batch)
+    assert np.isfinite(float(metrics["loss"]))
+    assert _finite(params2)
+    # params actually moved
+    delta = sum(float(jnp.abs(a - b).sum())
+                for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(params2)))
+    assert delta > 0
+
+
+@pytest.mark.parametrize("name", LM_ARCHS)
+def test_lm_decode_smoke(name):
+    arch = registry.get(name)
+    cfg = arch.config(smoke=True)
+    params = arch.init_params(jax.random.PRNGKey(0), cfg)
+    step = arch.make_step(cfg, "decode", RULES)
+    caches = T.init_cache(cfg, 2, 32)
+    logits, caches = step(params, caches, jnp.array([1, 2], jnp.int32),
+                          jnp.int32(0))
+    assert logits.shape == (2, cfg.vocab)
+    assert bool(jnp.isfinite(logits).all())
+
+
+@pytest.mark.parametrize("name", LM_ARCHS)
+def test_lm_prefill_then_decode_consistency(name):
+    """Greedy continuation from prefill caches matches full-forward logits."""
+    arch = registry.get(name)
+    cfg = arch.config(smoke=True)
+    params = arch.init_params(jax.random.PRNGKey(1), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(2), (1, 8), 0, cfg.vocab)
+    logits_full, _ = T.forward(params, toks, cfg, RULES)
+    # decode token-by-token from an empty cache
+    caches = T.init_cache(cfg, 1, 16)
+    for t in range(8):
+        logits_t, caches = T.decode_step(params, caches, toks[:, t],
+                                         jnp.int32(t), cfg, RULES)
+    np.testing.assert_allclose(np.asarray(logits_t[0]),
+                               np.asarray(logits_full[0, -1]),
+                               rtol=2e-2, atol=2e-3)
+
+
+def test_egnn_smoke_all_shapes():
+    arch = registry.get("egnn")
+    for shape in ("full_graph_sm", "molecule"):
+        cfg = arch.config_for(shape, smoke=True)
+        params = arch.init_params(jax.random.PRNGKey(0), cfg)
+        opt = adamw.init_state(params)
+        step = arch.make_step(cfg, "train", RULES)
+        if cfg.graph_readout:
+            batch = pipeline.molecule_batch(0, n_graphs=cfg.n_graphs,
+                                            nodes_per=6, edges_per=10,
+                                            d_feat=cfg.d_feat,
+                                            n_classes=cfg.n_classes)
+        else:
+            batch = pipeline.random_graph(0, 64, 256, cfg.d_feat, cfg.n_classes)
+        _, _, metrics = step(params, opt, batch)
+        assert np.isfinite(float(metrics["loss"]))
+
+
+def test_egnn_equivariance():
+    """E(n) property: rotating+translating inputs leaves logits unchanged."""
+    from repro.models import gnn
+    arch = registry.get("egnn")
+    cfg = arch.config_for("full_graph_sm", smoke=True)
+    params = arch.init_params(jax.random.PRNGKey(0), cfg)
+    batch = pipeline.random_graph(3, 40, 160, cfg.d_feat, cfg.n_classes)
+    logits = gnn.forward(params, batch, cfg, RULES)
+    # random rotation (QR) + translation
+    q, _ = np.linalg.qr(np.random.default_rng(0).standard_normal((3, 3)))
+    batch2 = dict(batch)
+    batch2["coords"] = batch["coords"] @ jnp.asarray(q.astype(np.float32)) + 5.0
+    logits2 = gnn.forward(params, batch2, cfg, RULES)
+    np.testing.assert_allclose(np.asarray(logits), np.asarray(logits2),
+                               rtol=2e-4, atol=2e-4)
+
+
+RECSYS = ["fm", "xdeepfm", "dlrm-mlperf", "sasrec"]
+
+
+@pytest.mark.parametrize("name", RECSYS)
+def test_recsys_train_and_serve_smoke(name):
+    arch = registry.get(name)
+    cfg = arch.config(smoke=True)
+    params = arch.init_params(jax.random.PRNGKey(0), cfg)
+    opt = adamw.init_state(params)
+    step = arch.make_step(cfg, "train", RULES)
+    batch = pipeline.recsys_batch(0, 0, batch=16, cfg=cfg)
+    _, _, metrics = step(params, opt, batch)
+    assert np.isfinite(float(metrics["loss"]))
+    serve = arch.make_step(cfg, "serve", RULES)
+    out = serve(params, batch)
+    if cfg.interaction == "self-attn-seq":
+        assert out.shape == (16, cfg.embed_dim)
+    else:
+        assert out.shape == (16,)
+        assert bool(((np.asarray(out) >= 0) & (np.asarray(out) <= 1)).all())
+
+
+@pytest.mark.parametrize("name", RECSYS)
+def test_recsys_retrieval_smoke(name):
+    arch = registry.get(name)
+    cfg = arch.config(smoke=True)
+    params = arch.init_params(jax.random.PRNGKey(0), cfg)
+    step = arch.make_step(cfg, "retrieval", RULES)
+    batch = pipeline.recsys_batch(0, 0, batch=1, cfg=cfg)
+    batch = {k: v for k, v in batch.items() if k not in ("label", "pos", "neg")}
+    n_cand = min(cfg.rows()[0] if cfg.interaction != "self-attn-seq"
+                 else cfg.n_items, 256)
+    batch["candidates"] = jnp.arange(n_cand, dtype=jnp.int32)
+    scores, idxs = step(params, batch)
+    assert scores.shape == (100,) and idxs.shape == (100,)
+    s = np.asarray(scores)
+    assert (np.diff(s) <= 1e-6).all()    # descending
+
+
+def test_all_cells_enumerate():
+    cells = list(registry.all_cells())
+    assigned = [c for c in cells if c.arch != "wtbc"]
+    assert len(assigned) == 40           # the brief's 40 cells
+    skips = [c for c in assigned if c.skip]
+    assert {(c.arch, c.shape) for c in skips} == {
+        ("qwen3-moe-235b-a22b", "long_500k"),
+        ("qwen3-1.7b", "long_500k"),
+        ("granite-3-8b", "long_500k")}

@@ -1,0 +1,113 @@
+"""WTBC-DR (Algorithm 1) vs brute-force tf-idf oracle.
+
+Scores are compared as sorted vectors (heap pop order among *tied* scores is
+unspecified, exactly as in the paper); documents strictly above the k-th
+score must match as sets.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import ranked, wtbc
+
+
+def check_topk_equal(bf, dr, atol=1e-4):
+    assert int(bf.n_found) == int(dr.n_found)
+    bs = np.sort(np.asarray(bf.scores))[::-1]
+    ds = np.sort(np.asarray(dr.scores))[::-1]
+    assert np.allclose(bs, ds, atol=atol), (bs, ds)
+    # docs strictly above the k-th score are uniquely determined
+    kth = bs[int(bf.n_found) - 1] if int(bf.n_found) else -np.inf
+    bf_docs = {int(d) for d, s in zip(np.asarray(bf.docs), np.asarray(bf.scores))
+               if s > kth + atol}
+    dr_docs = {int(d) for d, s in zip(np.asarray(dr.docs), np.asarray(dr.scores))
+               if s > kth + atol}
+    assert bf_docs == dr_docs
+
+
+def query_pool(idx, rng, q):
+    df = np.asarray(idx.df)
+    pool = np.flatnonzero((df >= 2) & (df <= int(idx.n_docs) // 2))
+    return rng.choice(pool, size=q, replace=False)
+
+
+@pytest.mark.parametrize("conjunctive", [True, False])
+def test_dr_matches_bruteforce(small_index, tfidf, conjunctive):
+    idx, model = small_index
+    idf = tfidf.idf(idx)
+    N = int(idx.n_docs)
+    rng = np.random.default_rng(7)
+    for trial in range(5):
+        words = jnp.asarray(query_pool(idx, rng, 3), jnp.int32)
+        wmask = jnp.ones(3, bool)
+        bf = ranked.topk_bruteforce(idx, words, wmask, idf, k=10,
+                                    conjunctive=conjunctive)
+        dr = ranked.topk_dr(idx, words, wmask, idf, k=10,
+                            conjunctive=conjunctive, heap_cap=2 * N + 4)
+        check_topk_equal(bf, dr)
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_dr_matches_bruteforce_property(small_index, tfidf, seed):
+    idx, model = small_index
+    idf = tfidf.idf(idx)
+    N = int(idx.n_docs)
+    rng = np.random.default_rng(seed)
+    words = jnp.asarray(query_pool(idx, rng, 3), jnp.int32)
+    wmask = jnp.asarray(rng.random(3) < 0.9)
+    if not bool(wmask.any()):
+        return
+    for conj in (True, False):
+        bf = ranked.topk_bruteforce(idx, words, wmask, idf, k=10,
+                                    conjunctive=conj)
+        dr = ranked.topk_dr(idx, words, wmask, idf, k=10, conjunctive=conj,
+                            heap_cap=2 * N + 4)
+        check_topk_equal(bf, dr)
+
+
+def test_dr_emission_order_descending(small_index, tfidf):
+    idx, _ = small_index
+    idf = tfidf.idf(idx)
+    rng = np.random.default_rng(3)
+    words = jnp.asarray(query_pool(idx, rng, 2), jnp.int32)
+    dr = ranked.topk_dr(idx, words, jnp.ones(2, bool), idf, k=15,
+                        conjunctive=False, heap_cap=2 * int(idx.n_docs) + 4)
+    s = np.asarray(dr.scores)[: int(dr.n_found)]
+    assert (np.diff(s) <= 1e-5).all()      # emitted most-relevant-first
+
+
+def test_dr_anytime_budget_prefix(small_index, tfidf):
+    """max_pops budget: results are a prefix of the exact ranking."""
+    idx, _ = small_index
+    idf = tfidf.idf(idx)
+    rng = np.random.default_rng(5)
+    words = jnp.asarray(query_pool(idx, rng, 2), jnp.int32)
+    wmask = jnp.ones(2, bool)
+    cap = 2 * int(idx.n_docs) + 4
+    full = ranked.topk_dr(idx, words, wmask, idf, k=10, conjunctive=False,
+                          heap_cap=cap)
+    budget = ranked.topk_dr(idx, words, wmask, idf, k=10, conjunctive=False,
+                            heap_cap=cap, max_pops=int(full.iters) // 2)
+    nb = int(budget.n_found)
+    assert nb <= int(full.n_found)
+    assert np.allclose(np.asarray(budget.scores)[:nb],
+                       np.asarray(full.scores)[:nb], atol=1e-5)
+
+
+def test_dr_batch_vmap(small_index, tfidf):
+    idx, _ = small_index
+    idf = tfidf.idf(idx)
+    rng = np.random.default_rng(9)
+    words = jnp.asarray(np.stack([query_pool(idx, rng, 2) for _ in range(4)]),
+                        jnp.int32)
+    wmask = jnp.ones((4, 2), bool)
+    res = ranked.topk_dr_batch(idx, words, wmask, idf, k=5, conjunctive=False,
+                               heap_cap=2 * int(idx.n_docs) + 4)
+    assert res.docs.shape == (4, 5)
+    for b in range(4):
+        bf = ranked.topk_bruteforce(idx, words[b], wmask[b], idf, k=5,
+                                    conjunctive=False)
+        assert np.allclose(np.sort(np.asarray(bf.scores)),
+                           np.sort(np.asarray(res.scores[b])), atol=1e-4)

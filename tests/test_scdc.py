@@ -1,0 +1,61 @@
+"""(s,c)-Dense Code: roundtrip, structure, optimality (property-based)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import scdc
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(1, 255), st.integers(1, 3000))
+def test_code_lengths_band_structure(s, v):
+    if scdc.capacity(s) < v:
+        return
+    lens = scdc.code_lengths(s, v)
+    c = 256 - s
+    assert (np.diff(lens) >= 0).all()                  # non-decreasing
+    assert (lens[:min(s, v)] == 1).all()               # first s are 1 byte
+    if v > s:
+        assert (lens[s:min(s + s * c, v)] == 2).all()
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(2, 4000), st.integers(50, 5000))
+def test_roundtrip(seed, vocab, n_tokens):
+    rng = np.random.default_rng(seed)
+    freqs = rng.zipf(1.4, vocab).astype(np.int64)
+    model = scdc.fit(freqs, reserve_first=0)
+    toks = rng.integers(0, vocab, n_tokens)
+    enc = model.encode_tokens(toks)
+    dec = model.decode_bytes(enc)
+    assert np.array_equal(dec, toks)
+    # stream length matches the analytic size
+    ranks = model.rank_of_word[toks]
+    assert len(enc) == int(model.lens[ranks].astype(np.int64).sum())
+
+
+def test_encode_decode_rank_inverse():
+    s = 200
+    for r in [0, 1, 199, 200, 5000, 100_000, 500_000]:
+        codes, lens = scdc.encode_table(s, r + 1)
+        byteseq = list(codes[r][: lens[r]])
+        assert scdc.decode_rank(s, byteseq) == r
+
+
+def test_reserved_separator_is_single_stopper():
+    rng = np.random.default_rng(0)
+    freqs = rng.integers(1, 100, 1000)
+    freqs[0] = 1                      # rare, but must still get rank 0
+    model = scdc.fit(freqs, reserve_first=0)
+    assert model.rank_of_word[0] == 0
+    assert model.lens[0] == 1 and model.codes[0, 0] == 0
+
+
+def test_optimal_sc_beats_neighbors():
+    rng = np.random.default_rng(1)
+    freqs_desc = np.sort(rng.zipf(1.3, 5000))[::-1].astype(np.int64)
+    s, c = scdc.optimal_sc(freqs_desc)
+    best = scdc.compressed_size(s, freqs_desc)
+    for s2 in (s - 1, s + 1):
+        if 1 <= s2 <= 255 and scdc.capacity(s2) >= len(freqs_desc):
+            assert scdc.compressed_size(s2, freqs_desc) >= best

@@ -1,0 +1,49 @@
+"""Scoring measures: tf-idf monotonicity over concatenation (the property
+Algorithm 1's correctness rests on), BM25 shape/behavior."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import scoring
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.integers(0, 50), min_size=2, max_size=6),
+       st.lists(st.integers(0, 50), min_size=2, max_size=6),
+       st.lists(st.floats(0.0, 10.0, allow_nan=False), min_size=6, max_size=6))
+def test_tfidf_monotone_over_concatenation(tf1, tf2, idf):
+    """score(d1 ++ d2) >= max(score(d1), score(d2)) — paper §3.1."""
+    q = min(len(tf1), len(tf2))
+    t1 = jnp.asarray(tf1[:q], jnp.int32)
+    t2 = jnp.asarray(tf2[:q], jnp.int32)
+    w = jnp.asarray(idf[:q], jnp.float32)
+    m = scoring.TfIdf()
+    s1 = float(m.score(t1, w))
+    s2 = float(m.score(t2, w))
+    s12 = float(m.score(t1 + t2, w))
+    assert s12 >= max(s1, s2) - 1e-4
+
+
+def test_bm25_not_monotone_example():
+    """Document-length normalization breaks concatenation monotonicity —
+    the reason the paper restricts BM25 to the DRB strategy."""
+    m = scoring.BM25()
+    idf = jnp.asarray([2.0])
+    # d1: tf=5, len 10; concat with an empty-ish long doc: tf same, len 1000
+    s_short = float(m.score(jnp.asarray([5]), idf, jnp.float32(10.0),
+                            jnp.float32(100.0)))
+    s_concat = float(m.score(jnp.asarray([5]), idf, jnp.float32(1000.0),
+                             jnp.float32(100.0)))
+    assert s_concat < s_short
+
+
+def test_idf_tables(small_index):
+    idx, _ = small_index
+    tf_idf = scoring.TfIdf().idf(idx)
+    bm = scoring.BM25().idf(idx)
+    assert tf_idf.shape == bm.shape == (idx.vocab_size,)
+    df = np.asarray(idx.df)
+    present = df > 0
+    # rarer words score higher under both
+    order = np.argsort(df[present])
+    assert (np.diff(np.asarray(tf_idf)[present][order]) <= 1e-6).all()

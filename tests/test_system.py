@@ -1,0 +1,71 @@
+"""End-to-end behaviour: a search engine built from text in, ranked docs out.
+
+Covers the full pipeline the paper describes: tokenize -> fit (s,c)-DC ->
+build WTBC (+DRB bitmaps) -> answer top-k AND/OR queries -> extract snippets
+around hits — all from the compressed representation only.
+"""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import drb, ranked, scoring, wtbc
+from repro.text import corpus, vocab
+
+
+def build_engine():
+    docs = [
+        "the compressed index answers ranked queries fast".split(),
+        "wavelet trees rearrange the bytes of dense codes".split(),
+        "ranked retrieval with wavelet trees uses little space".split(),
+        "inverted indexes use more space than compressed self indexes".split(),
+        "the quick brown fox avoids information retrieval".split(),
+        "space efficient ranked retrieval on wavelet trees trees trees".split(),
+    ]
+    v = vocab.Vocabulary.from_documents(docs)
+    idx, model = wtbc.build_index(v.encode_docs(docs), v.size, block=256)
+    aux = drb.build_aux(idx, model, v.encode_docs(docs))
+    return docs, v, idx, model, aux
+
+
+def test_end_to_end_and_query():
+    docs, v, idx, model, aux = build_engine()
+    measure = scoring.TfIdf()
+    idf = measure.idf(idx)
+    words = jnp.asarray(model.rank_of_word[[v.id_of("wavelet"), v.id_of("trees")]],
+                        jnp.int32)
+    wmask = jnp.ones(2, bool)
+    res = ranked.topk_dr(idx, words, wmask, idf, k=3, conjunctive=True,
+                         heap_cap=2 * len(docs) + 4)
+    got = [int(d) for d in np.asarray(res.docs)[: int(res.n_found)]]
+    # docs containing both: 1, 2, 5; doc 5 has tf(trees)=3 -> highest score
+    assert set(got) == {1, 2, 5}
+    assert got[0] == 5
+    drb_res = drb.topk_drb_and(idx, aux, words, wmask, measure, k=3)
+    assert set(int(d) for d in np.asarray(drb_res.docs)[:3]) == {1, 2, 5}
+
+
+def test_end_to_end_or_query_and_snippet():
+    docs, v, idx, model, aux = build_engine()
+    measure = scoring.TfIdf()
+    idf = measure.idf(idx)
+    words = jnp.asarray(model.rank_of_word[[v.id_of("fox"), v.id_of("space")]],
+                        jnp.int32)
+    wmask = jnp.ones(2, bool)
+    res = ranked.topk_dr(idx, words, wmask, idf, k=5, conjunctive=False,
+                         heap_cap=2 * len(docs) + 4)
+    got = {int(d) for d in np.asarray(res.docs)[: int(res.n_found)]}
+    assert got == {2, 3, 4, 5}
+    # snippet: locate the only occurrence of 'fox' and decode around it
+    w_fox = int(model.rank_of_word[v.id_of("fox")])
+    p = int(wtbc.locate(idx, jnp.int32(w_fox), jnp.int32(1)))
+    snippet_ranks = np.asarray(wtbc.extract(idx, jnp.int32(p - 2), 3))
+    snippet = [v.words[int(model.word_of_rank[r])] for r in snippet_ranks]
+    assert snippet == ["quick", "brown", "fox"]
+
+
+def test_space_report_accounts_everything():
+    docs, v, idx, model, aux = build_engine()
+    rep = wtbc.space_report(idx)
+    assert rep["total"] == sum(v for k, v in rep.items() if k != "total")
+    assert rep["level_bytes"] > 0
+    rep2 = drb.space_report(aux)
+    assert rep2["bitmap_bits_bytes"] > 0
