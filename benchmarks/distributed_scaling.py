@@ -11,9 +11,8 @@ import textwrap
 SCRIPT = textwrap.dedent("""
     import os
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
-    import time, numpy as np, jax, jax.numpy as jnp
-    from jax.sharding import Mesh
-    from repro.core import distributed, ranked, scoring, wtbc
+    import time, jax
+    from repro.engine import EngineConfig, SearchEngine
     from repro.text import corpus
 
     cp = corpus.make_corpus(n_docs=2000, mean_doc_len=150, vocab_size=20000, seed=0)
@@ -22,13 +21,9 @@ SCRIPT = textwrap.dedent("""
     qs = corpus.sample_queries(df, bands["ii"], 16, 3, seed=1)
 
     for n_shards in (1, 8):
-        sharded, model = distributed.build_sharded(cp.doc_tokens, cp.vocab_size,
-                                                   n_shards=n_shards, with_drb=False)
-        mesh = Mesh(np.array(jax.devices()[:n_shards]).reshape(n_shards), ("shards",))
-        words = jnp.asarray(model.rank_of_word[qs], jnp.int32)
-        wmask = jnp.ones_like(words, dtype=bool)
-        fn = lambda: distributed.distributed_topk(sharded, words, wmask, k=10,
-            method="dr-or", mesh=mesh, shard_axes="shards")
+        engine = SearchEngine.shard(cp, n_shards=n_shards,
+                                    config=EngineConfig(with_drb=False))
+        fn = lambda: engine.search(qs, k=10, mode="or", strategy="dr").scores
         jax.block_until_ready(fn())     # compile
         t0 = time.time(); jax.block_until_ready(fn()); dt = time.time() - t0
         print(f"distributed/dr-or_shards{n_shards},"

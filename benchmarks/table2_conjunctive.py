@@ -1,33 +1,33 @@
 """Paper Table 2: top-k weighted conjunctive (AND) queries — WTBC-DR vs
 WTBC-DRB across document-frequency bands and query lengths.
 
-Times are ms/query over jit-compiled query batches (batching via vmap is the
+Both strategies run through ``repro.engine.SearchEngine`` — the benchmark
+sends plain word-id query batches and picks ``strategy="dr"`` / ``"drb"``;
+rank mapping, masks, heap/df caps, and executor caching are the facade's job.
+Times are ms/query over jit-compiled query batches (batching is the
 TPU-serving deployment shape; per-query time = batch time / batch size).
 """
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
 from benchmarks import common
-from repro.core import drb, ranked, scoring
 from repro.text import corpus
 
 
 def query_sets(b: common.Bench, bands: dict, n_queries: int, n_words: int):
+    """Word-id query batches per df band (+ a Zipf 'real log' mix)."""
     df_by_word = b.cp.doc_freqs()
     out = {}
     for name, band in bands.items():
         try:
-            q = corpus.sample_queries(df_by_word, band, n_queries, n_words,
-                                      seed=hash((name, n_words)) % 2**31)
+            out[name] = corpus.sample_queries(df_by_word, band, n_queries,
+                                              n_words,
+                                              seed=hash((name, n_words)) % 2**31)
         except ValueError:
             continue
-        out[name] = b.model.rank_of_word[q]
-    out["real"] = b.model.rank_of_word[
-        corpus.zipf_real_queries(df_by_word, n_queries, n_words,
-                                 seed=n_words)]
+    out["real"] = corpus.zipf_real_queries(df_by_word, n_queries, n_words,
+                                           seed=n_words)
     return out
 
 
@@ -35,47 +35,24 @@ def run(bench: common.Bench | None = None, *, conjunctive: bool = True,
         n_queries: int = 16, words_list=(1, 2, 4), ks=(10,),
         band_names=("i", "ii", "iii"), print_rows=print) -> dict:
     b = bench or common.build()
-    measure = scoring.TfIdf()
-    idf = measure.idf(b.idx)
-    N = int(b.idx.n_docs)
-    bands = {k: v for k, v in corpus.fdoc_bands(N).items() if k in band_names}
-    heap_cap = 2 * N + 4
+    mode = "and" if conjunctive else "or"
+    bands = {name: v for name, v in corpus.fdoc_bands(b.cp.n_docs).items()
+             if name in band_names}
     tag = "table2" if conjunctive else "table3"
     results = {}
-    max_df = int(np.asarray(b.idx.df).max())
 
     for n_words in words_list:
         sets = query_sets(b, bands, n_queries, n_words)
         for band, qs in sets.items():
-            words = jnp.asarray(qs, jnp.int32)
-            wmask = jnp.ones_like(words, dtype=bool)
             for k in ks:
-                # WTBC-DR
-                fn = lambda: ranked.topk_dr_batch(
-                    b.idx, words, wmask, idf, k=k, conjunctive=conjunctive,
-                    heap_cap=heap_cap)
-                dt = common.time_fn(fn)
-                ms = dt / n_queries * 1e3
-                name = f"{tag}/DR_band-{band}_w{n_words}_k{k}"
-                results[name] = ms
-                print_rows(common.csv_row(name, ms * 1e3, f"{ms:.3f}ms/query"))
-                # WTBC-DRB
-                df_q = np.asarray(b.idx.df)[qs].max()
-                if conjunctive:
-                    fnb = lambda: jax.vmap(
-                        lambda w, m: drb.topk_drb_and(b.idx, b.aux, w, m,
-                                                      measure, k=k))(words, wmask)
-                else:
-                    cap = int(min(max_df, df_q)) + 2
-                    fnb = lambda: jax.vmap(
-                        lambda w, m: drb.topk_drb_or(b.idx, b.aux, w, m,
-                                                     measure, k=k,
-                                                     max_df_cap=cap))(words, wmask)
-                dtb = common.time_fn(fnb)
-                msb = dtb / n_queries * 1e3
-                name = f"{tag}/DRB_band-{band}_w{n_words}_k{k}"
-                results[name] = msb
-                print_rows(common.csv_row(name, msb * 1e3, f"{msb:.3f}ms/query"))
+                for strategy in ("dr", "drb"):
+                    fn = lambda: b.engine.search(qs, k=k, mode=mode,
+                                                 strategy=strategy).scores
+                    dt = common.time_fn(fn)
+                    ms = dt / n_queries * 1e3
+                    name = f"{tag}/{strategy.upper()}_band-{band}_w{n_words}_k{k}"
+                    results[name] = ms
+                    print_rows(common.csv_row(name, ms * 1e3, f"{ms:.3f}ms/query"))
     return results
 
 

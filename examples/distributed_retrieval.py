@@ -1,4 +1,6 @@
-"""Document-sharded distributed retrieval over 8 simulated devices.
+"""Document-sharded distributed retrieval over 8 simulated devices, served
+through `repro.engine.SearchEngine.shard` — the facade owns the mesh, the
+shard merge, and the jitted executor cache.
 
     PYTHONPATH=src python examples/distributed_retrieval.py
 """
@@ -8,11 +10,9 @@ os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
-from jax.sharding import Mesh
 
-from repro.core import distributed, scoring
+from repro.engine import SearchEngine
 from repro.text import corpus
 
 
@@ -20,28 +20,24 @@ def main():
     cp = corpus.make_corpus(n_docs=2000, mean_doc_len=150, vocab_size=20000,
                             seed=0)
     t0 = time.time()
-    sharded, model = distributed.build_sharded(cp.doc_tokens, cp.vocab_size,
-                                               n_shards=8)
+    engine = SearchEngine.shard(cp, n_shards=8)
     print(f"built 8 shards in {time.time()-t0:.1f}s "
-          f"({cp.n_tokens} tokens, global (s,c)=({model.s},{model.c}))")
+          f"({cp.n_tokens} tokens, global (s,c)=({engine.model.s},{engine.model.c}))")
 
-    mesh = Mesh(np.array(jax.devices()).reshape(8), ("shards",))
     df = cp.doc_freqs()
     bands = corpus.fdoc_bands(cp.n_docs)
     queries = corpus.sample_queries(df, bands["ii"], 16, 3, seed=2)
-    words = jnp.asarray(model.rank_of_word[queries], jnp.int32)
-    wmask = jnp.ones_like(words, dtype=bool)
 
-    for method in ("dr-or", "dr-and", "drb-and"):
-        fn = lambda: distributed.distributed_topk(
-            sharded, words, wmask, k=10, method=method, mesh=mesh,
-            shard_axes="shards", max_df_cap=256)
-        jax.block_until_ready(fn())
+    for mode, strategy in (("or", "dr"), ("and", "dr"), ("and", "drb")):
+        run = lambda: engine.search(queries, k=10, mode=mode, strategy=strategy)
+        jax.block_until_ready(run().scores)
         t0 = time.time()
-        res = jax.block_until_ready(fn())
+        res = run()
+        jax.block_until_ready(res.scores)
         dt = (time.time() - t0) / 16 * 1e3
-        print(f"{method:8s} {dt:7.2f} ms/query | global top doc q0: "
-              f"{int(np.asarray(res.docs)[0, 0])} | shard pops: {int(res.iters[0]) if res.iters.ndim else int(res.iters)}")
+        print(f"{strategy}-{mode:4s} {dt:7.2f} ms/query | global top doc q0: "
+              f"{int(np.asarray(res.docs)[0, 0])} | shard pops: "
+              f"{int(np.asarray(res.work)[0])}")
 
 
 if __name__ == "__main__":

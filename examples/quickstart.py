@@ -1,11 +1,10 @@
-"""Quickstart: build a WTBC over a few documents and run every query type.
+"""Quickstart: build a SearchEngine over a few documents and run every query
+type through the one facade — AND / OR, DR / DRB / auto, tf-idf / BM25 —
+then recover snippets straight from the compressed index.
 
     PYTHONPATH=src python examples/quickstart.py
 """
-import jax.numpy as jnp
-import numpy as np
-
-from repro.core import drb, ranked, scoring, wtbc
+from repro.engine import SearchEngine
 from repro.text import vocab
 
 DOCS = [
@@ -20,38 +19,28 @@ DOCS = [
 
 def main():
     v = vocab.Vocabulary.from_documents(DOCS)
-    idx, model = wtbc.build_index(v.encode_docs(DOCS), v.size, block=256)
-    aux = drb.build_aux(idx, model, v.encode_docs(DOCS))
-    measure = scoring.TfIdf()
-    idf = measure.idf(idx)
+    engine = SearchEngine.build(v.encode_docs(DOCS), vocab_size=v.size)
 
-    def q(*ws):
-        ranks = model.rank_of_word[[v.id_of(w) for w in ws]]
-        return jnp.asarray(ranks, jnp.int32), jnp.ones(len(ws), bool)
+    def ids(*ws):
+        return [v.id_of(w) for w in ws]
 
-    words, wmask = q("ranked", "retrieval")
-    print("== AND query: 'ranked retrieval' ==")
-    res = ranked.topk_dr(idx, words, wmask, idf, k=3, conjunctive=True,
-                         heap_cap=2 * len(DOCS) + 4)
-    for d, s in zip(np.asarray(res.docs), np.asarray(res.scores)):
-        if d >= 0:
-            print(f"  doc {d} (tf-idf {s:.2f}): {' '.join(DOCS[d])}")
+    print("== AND query: 'ranked retrieval' (DR — no extra space) ==")
+    res = engine.search([ids("ranked", "retrieval")], k=3, mode="and",
+                        strategy="dr")
+    for d, s in res.hits(0):
+        print(f"  doc {d} (tf-idf {s:.2f}): {' '.join(DOCS[d])}")
 
-    print("== OR query via DRB, BM25: 'space fox' ==")
-    words, wmask = q("space", "fox")
-    res = drb.topk_drb_or(idx, aux, words, wmask, scoring.BM25(), k=3,
-                          max_df_cap=8)
-    for d, s in zip(np.asarray(res.docs), np.asarray(res.scores)):
-        if d >= 0:
-            print(f"  doc {d} (bm25 {s:.2f}): {' '.join(DOCS[d])}")
+    print("== OR query, BM25: 'space fox' (auto-routed to DRB) ==")
+    res = engine.search([ids("space", "fox")], k=3, mode="or", measure="bm25")
+    for d, s in res.hits(0):
+        print(f"  doc {d} (bm25 {s:.2f}): {' '.join(DOCS[d])}")
 
     print("== snippet extraction from the compressed text ==")
-    w = int(model.rank_of_word[v.id_of("fox")])
-    p = int(wtbc.locate(idx, jnp.int32(w), jnp.int32(1)))
-    snippet = np.asarray(wtbc.extract(idx, jnp.int32(p - 2), 5))
-    print("  ...", " ".join(v.words[int(model.word_of_rank[r])] for r in snippet), "...")
+    for hit, snippet in zip(res.hits(0), engine.snippets(res, length=5)[0]):
+        words = " ".join(v.words[int(w)] for w in snippet)
+        print(f"  doc {hit[0]}: {words} ...")
 
-    rep = wtbc.space_report(idx)
+    rep = engine.space_report()
     print(f"== space == total index bytes: {rep['total']} "
           f"(byte stream {rep['level_bytes']}, counters {rep['rank_counters']})")
 

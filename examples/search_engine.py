@@ -1,5 +1,7 @@
 """End-to-end driver: a small in-memory search engine serving batched ranked
-queries over a synthetic corpus (the paper's deployment, scaled to CPU).
+queries over a synthetic corpus (the paper's deployment, scaled to CPU), all
+through the unified `repro.engine.SearchEngine` facade — one build call, one
+``search`` call per workload shape.
 
     PYTHONPATH=src python examples/search_engine.py --docs 2000 --batch 32
 """
@@ -7,10 +9,9 @@ import argparse
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core import drb, ranked, scoring, wtbc
+from repro.engine import SearchEngine
 from repro.text import corpus
 
 
@@ -25,40 +26,32 @@ def main():
     t0 = time.time()
     cp = corpus.make_corpus(n_docs=args.docs, mean_doc_len=200,
                             vocab_size=args.vocab, seed=0)
-    idx, model = wtbc.build_index(cp.doc_tokens, cp.vocab_size)
-    aux = drb.build_aux(idx, model, cp.doc_tokens)
+    engine = SearchEngine.build(cp)
     print(f"indexed {cp.n_tokens} tokens / {cp.n_docs} docs "
           f"in {time.time()-t0:.1f}s")
-    rep = wtbc.space_report(idx)
+    rep = engine.space_report()
     print(f"index bytes: {rep['total']:,} "
           f"({rep['total']/cp.n_tokens:.2f} B/token)")
 
-    measure = scoring.TfIdf()
-    idf = measure.idf(idx)
     df = cp.doc_freqs()
     bands = corpus.fdoc_bands(cp.n_docs)
     queries = corpus.sample_queries(df, bands["ii"], args.batch, 3, seed=1)
-    words = jnp.asarray(model.rank_of_word[queries], jnp.int32)
-    wmask = jnp.ones_like(words, dtype=bool)
-    heap_cap = 2 * int(idx.n_docs) + 4
 
-    for name, fn in [
-        ("DR/AND", lambda: ranked.topk_dr_batch(idx, words, wmask, idf,
-                                                k=args.k, conjunctive=True,
-                                                heap_cap=heap_cap)),
-        ("DR/OR", lambda: ranked.topk_dr_batch(idx, words, wmask, idf,
-                                               k=args.k, conjunctive=False,
-                                               heap_cap=heap_cap)),
-        ("DRB/AND", lambda: jax.vmap(
-            lambda w, m: drb.topk_drb_and(idx, aux, w, m, measure, k=args.k)
-        )(words, wmask)),
+    for name, kw in [
+        ("DR/AND", dict(mode="and", strategy="dr")),
+        ("DR/OR", dict(mode="or", strategy="dr")),
+        ("DRB/AND", dict(mode="and", strategy="drb")),
+        ("BM25/OR", dict(mode="or", strategy="auto", measure="bm25")),
     ]:
-        jax.block_until_ready(fn())                # compile
+        run = lambda: engine.search(queries, k=args.k, **kw)
+        jax.block_until_ready(run().scores)        # compile
         t0 = time.time()
-        res = jax.block_until_ready(fn())
+        res = run()
+        jax.block_until_ready(res.scores)
         dt = (time.time() - t0) / args.batch * 1e3
         print(f"{name:8s} {dt:7.2f} ms/query | "
               f"top doc of q0: {int(np.asarray(res.docs)[0, 0])}")
+    print(f"executor cache: {engine.stats['executors']} compiled programs")
 
 
 if __name__ == "__main__":

@@ -89,6 +89,7 @@ def abstract_sharded(cfg: WTBCDeployConfig, n_shards: int) -> D.ShardedWTBC:
                   n_bits=sds((n_shards,), jnp.int32)),
         bit_off=i32v(V + 1), has_bm=sds((n_shards, V), jnp.bool_), eps=1e-6)
     return D.ShardedWTBC(idx=idx, aux=aux, doc_base=i32v(),
+                         global_df=sds((V,), jnp.int32),   # replicated
                          global_idf=sds((V,), F32),        # replicated
                          global_avg_dl=sds((), F32),       # replicated
                          n_shards=n_shards)
@@ -147,6 +148,7 @@ class WTBCPaperArch(ArchDef):
             idx=jax.tree.map(leaf, sharded_abs.idx),
             aux=jax.tree.map(leaf, sharded_abs.aux),
             doc_base=P(shard_axes),
+            global_df=P(),
             global_idf=P(),
             global_avg_dl=P(),
             n_shards=sharded_abs.n_shards)

@@ -40,9 +40,22 @@ from repro.core.drb import DRBAux
 from repro.core.wtbc import WTBCIndex
 
 
+def _shard_map(f, *, mesh, in_specs, out_specs):
+    """jax.shard_map across jax versions: the top-level export (with its
+    ``check_vma`` knob) landed after 0.4.x; older releases ship it as
+    ``jax.experimental.shard_map`` with the knob spelled ``check_rep``."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False)
+    from jax.experimental.shard_map import shard_map
+    return shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                     check_rep=False)
+
+
 @functools.partial(
     jax.tree_util.register_dataclass,
-    data_fields=("idx", "aux", "doc_base", "global_idf", "global_avg_dl"),
+    data_fields=("idx", "aux", "doc_base", "global_df", "global_idf",
+                 "global_avg_dl"),
     meta_fields=("n_shards",))
 @dataclasses.dataclass(frozen=True)
 class ShardedWTBC:
@@ -50,7 +63,9 @@ class ShardedWTBC:
     idx: WTBCIndex          # every leaf has leading dim n_shards
     aux: DRBAux | None      # stacked DRB bitmaps (or None)
     doc_base: jnp.ndarray   # (n_shards,) int32 global docid of shard's doc 0
-    global_idf: jnp.ndarray # (V,) float32
+    global_df: jnp.ndarray  # (V,) int32 global document frequency per rank
+    global_idf: jnp.ndarray # (V,) float32 (tf-idf form; other measures can
+                            # derive their own table from global_df)
     global_avg_dl: jnp.ndarray  # () float32 (BM25 length normalization)
     n_shards: int
 
@@ -169,6 +184,7 @@ def build_sharded(doc_tokens: list[np.ndarray], vocab_size: int, n_shards: int,
 
     avg_dl = np.float32(doc_len.sum() / max(n_docs, 1))
     sharded = ShardedWTBC(idx=idx, aux=aux, doc_base=jnp.asarray(doc_base),
+                          global_df=jnp.asarray(df_global.astype(np.int32)),
                           global_idf=jnp.asarray(idf_np),
                           global_avg_dl=jnp.asarray(avg_dl), n_shards=n_shards)
     return sharded, model
@@ -183,18 +199,27 @@ def distributed_topk(sharded: ShardedWTBC, words: jnp.ndarray, wmask: jnp.ndarra
                      shard_axes: str | tuple[str, ...],
                      heap_cap: int | None = None,
                      max_df_cap: int = 256,
-                     measure=None) -> ranked.DRResult:
+                     max_pops: int | None = None,
+                     measure=None,
+                     idf: jnp.ndarray | None = None) -> ranked.DRResult:
     """Run a top-k query over the sharded index under ``mesh``.
 
     method: 'dr-and' | 'dr-or' | 'drb-and' | 'drb-or'.
     shard_axes: mesh axis (or axes tuple) the documents are sharded over; the
     total device count along them must equal ``sharded.n_shards``.
+    max_pops: per-shard any-time budget for the DR methods (straggler
+    mitigation, see module docstring); None = run each shard to completion.
+    idf: (V,) replicated scoring table; defaults to ``sharded.global_idf``
+    (tf-idf form).  Pass a measure-specific table (derivable from
+    ``sharded.global_df``) so shard scores match the single-host backend.
     """
     from repro.core import scoring
     measure = measure or scoring.TfIdf()
     axes = (shard_axes,) if isinstance(shard_axes, str) else tuple(shard_axes)
     if heap_cap is None:
         heap_cap = 2 * int(np.max(np.asarray(sharded.idx.n_docs))) + 4
+    if idf is None:
+        idf = sharded.global_idf
 
     spec_shard = P(axes if len(axes) > 1 else axes[0])
     sharded_specs = ShardedWTBC(
@@ -202,30 +227,31 @@ def distributed_topk(sharded: ShardedWTBC, words: jnp.ndarray, wmask: jnp.ndarra
         aux=(jax.tree.map(lambda _: spec_shard, sharded.aux)
              if sharded.aux is not None else None),
         doc_base=spec_shard,
-        global_idf=P(),               # replicated scoring table
+        global_df=P(),                # replicated scoring tables
+        global_idf=P(),
         global_avg_dl=P(),
         n_shards=sharded.n_shards)
-    in_specs = (sharded_specs, P(), P())
+    in_specs = (sharded_specs, P(), P(), P())
     out_specs = (P(), P(), P(), P())
 
-    def local(sh: ShardedWTBC, words, wmask):
+    def local(sh: ShardedWTBC, words, wmask, idf_tab):
         batched = words.ndim == 2                      # (B, Q) query batches
         idx = jax.tree.map(lambda x: x[0], sh.idx)
 
         def one(words1, wmask1):
             if method == "dr-and" or method == "dr-or":
-                return ranked.topk_dr(idx, words1, wmask1, sh.global_idf,
+                return ranked.topk_dr(idx, words1, wmask1, idf_tab,
                                       k=k, conjunctive=(method == "dr-and"),
-                                      heap_cap=heap_cap)
+                                      heap_cap=heap_cap, max_pops=max_pops)
             aux = jax.tree.map(lambda x: x[0], sh.aux)
             if method == "drb-and":
                 return drb_mod.topk_drb_and(idx, aux, words1, wmask1, measure,
-                                            k=k, idf=sh.global_idf,
+                                            k=k, idf=idf_tab,
                                             avg_dl=sh.global_avg_dl)
             if method == "drb-or":
                 return drb_mod.topk_drb_or(idx, aux, words1, wmask1, measure,
                                            k=k, max_df_cap=max_df_cap,
-                                           idf=sh.global_idf,
+                                           idf=idf_tab,
                                            avg_dl=sh.global_avg_dl)
             raise ValueError(method)
 
@@ -249,7 +275,6 @@ def distributed_topk(sharded: ShardedWTBC, words: jnp.ndarray, wmask: jnp.ndarra
             iters = jax.lax.psum(iters, ax)
         return (jnp.where(top_s > -jnp.inf, top_d, -1), top_s, n_found, iters)
 
-    fn = jax.shard_map(local, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
-                       check_vma=False)
-    docs, scores, n_found, iters = fn(sharded, words, wmask)
+    fn = _shard_map(local, mesh=mesh, in_specs=in_specs, out_specs=out_specs)
+    docs, scores, n_found, iters = fn(sharded, words, wmask, idf)
     return ranked.DRResult(docs, scores, n_found, iters)

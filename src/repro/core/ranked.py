@@ -124,9 +124,10 @@ def topk_dr(idx: WTBCIndex, words: jnp.ndarray, wmask: jnp.ndarray,
 
 def topk_dr_batch(idx: WTBCIndex, words: jnp.ndarray, wmask: jnp.ndarray,
                   idf: jnp.ndarray, *, k: int, conjunctive: bool,
-                  heap_cap: int) -> DRResult:
+                  heap_cap: int, max_pops: int | None = None) -> DRResult:
     """Batched queries: ``words``/``wmask`` are (B, Q)."""
-    fn = functools.partial(topk_dr, k=k, conjunctive=conjunctive, heap_cap=heap_cap)
+    fn = functools.partial(topk_dr, k=k, conjunctive=conjunctive,
+                           heap_cap=heap_cap, max_pops=max_pops)
     return jax.vmap(lambda w, m: fn(idx, w, m, idf))(words, wmask)
 
 

@@ -277,12 +277,15 @@ def locate(idx: WTBCIndex, w: jnp.ndarray, j: jnp.ndarray) -> jnp.ndarray:
     """Root position of the j-th (1-based) occurrence of word-rank w.
 
     Walks leaf -> root with one select per level (paper §2.2 'locating').
-    Returns idx.n if j is out of range.
+    Out-of-range ``j`` (j < 1 or j > occ[w]) is not checked here: each level's
+    ``bytemap.select`` saturates to its stream length, so the walk returns a
+    position >= the word's last occurrence — typically ``idx.n`` — but callers
+    that cannot guarantee ``1 <= j <= idx.occ[w]`` must validate ``j``
+    themselves before trusting the result.
     """
     # start: at the leaf level (len-1) the j-th occurrence of w corresponds to
     # the (base_rank + j)-th occurrence of its stopper byte in that level.
     pos = jnp.int32(0)
-    started = jnp.zeros((), dtype=bool)
     for L in range(MAX_LEVELS - 1, -1, -1):
         byte = idx.cw[w, L]
         off = idx.node_off[w, L]
@@ -293,7 +296,6 @@ def locate(idx: WTBCIndex, w: jnp.ndarray, j: jnp.ndarray) -> jnp.ndarray:
         occ_idx = jnp.where(is_leaf, base + j, base + pos + 1)
         p = bytemap.select(idx.levels[L], byte, occ_idx) - off
         pos = jnp.where(active, p, pos)
-        started = started | is_leaf
     return pos.astype(jnp.int32)
 
 

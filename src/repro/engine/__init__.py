@@ -1,0 +1,21 @@
+"""repro.engine — the unified ranked-retrieval query facade.
+
+One API over every backend the repo implements: WTBC-DR (ranked retrieval in
+no extra space, paper §3.1), WTBC-DRB (small tf bitmaps, §3.2), and the
+document-sharded mesh deployment (core/distributed.py).
+
+    from repro.engine import SearchEngine
+
+    engine = SearchEngine.build(doc_tokens)       # or SearchEngine.shard(...)
+    results = engine.search(queries, k=10, mode="and", measure="bm25")
+    engine.snippets(results, length=8)
+
+See :class:`SearchEngine` for the full contract, :class:`EngineConfig` for
+build knobs, and :class:`SearchResults` for the result object.
+"""
+from repro.engine.config import EngineConfig
+from repro.engine.facade import MEASURES, MODES, STRATEGIES, SearchEngine
+from repro.engine.results import SearchResults
+
+__all__ = ["EngineConfig", "SearchEngine", "SearchResults",
+           "MEASURES", "MODES", "STRATEGIES"]

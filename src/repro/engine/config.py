@@ -1,0 +1,39 @@
+"""Build-time configuration for the :class:`repro.engine.SearchEngine` facade.
+
+Everything here is a *build* knob (index layout, DRB bitmap policy); query-time
+knobs (k, mode, strategy, measure, budget) are ``SearchEngine.search``
+arguments so one built engine serves every workload shape.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core import bytemap
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    """Knobs for ``SearchEngine.build`` / ``SearchEngine.shard``.
+
+    block:     rank-counter block size of every ByteMap level (space/speed
+               trade of the partial counters, paper §2.3).
+    eps:       DRB stopword threshold — words with idf < eps get no tf bitmap
+               (paper: 1e-6 filters only near-universal words).
+    with_drb:  whether the DRB auxiliary bitmaps may be built.  The single
+               backend builds them *lazily* on the first DRB-routed query, so
+               a DR-only deployment pays no bitmap space; the sharded backend
+               stacks them *eagerly* at build time (rectangular pytree).
+               ``with_drb=False`` skips/forbids the build on both backends —
+               and therefore BM25 / explicit ``strategy="drb"`` queries.
+    default_k: results per query when ``search`` is called without ``k``.
+    """
+    block: int = bytemap.DEFAULT_BLOCK
+    eps: float = 1e-6
+    with_drb: bool = True
+    default_k: int = 10
+
+    def __post_init__(self):
+        if self.block <= 0:
+            raise ValueError(f"block must be positive, got {self.block}")
+        if self.default_k <= 0:
+            raise ValueError(f"default_k must be positive, got {self.default_k}")

@@ -1,0 +1,83 @@
+"""Jitted query executors behind the :class:`repro.engine.SearchEngine` facade.
+
+One executor = one ``jax.jit``-compiled callable specialized on everything XLA
+needs static: ``(backend, strategy, mode, measure, k, batch_shape, budget)``.
+The facade caches executors by exactly that key, so repeated traffic with the
+same shape hits an already-compiled program — the single place the ROADMAP's
+serving path gets its compile-once/run-many behavior.
+
+Trace accounting: each executor's Python body runs only when jax *traces* it
+(once per compilation), so the ``note()`` callback it invokes counts actual
+retraces.  ``SearchEngine.stats["traces"]`` exposes the counters and
+``tests/test_engine.py`` pins the cache behavior with them.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+
+from repro.core import distributed, drb, ranked
+
+
+class ExecutorKey(NamedTuple):
+    """Hashable cache key — everything that forces a distinct XLA program."""
+    backend: str          # "single" | "sharded"
+    strategy: str         # "dr" | "drb" (post-"auto" resolution)
+    mode: str             # "and" | "or"
+    measure: Any          # frozen scoring dataclass (hashable, carries params)
+    k: int
+    batch_shape: tuple[int, int]   # (B, Q)
+    budget: int | None    # DR max_pops
+    df_cap: int | None    # DRB/OR gather width (pow2-bucketed); None otherwise
+
+
+def make_single_dr(key: ExecutorKey, *, heap_cap: int, note):
+    """(idx, words, wmask, idf) -> DRResult with (B, k) leaves."""
+    conjunctive = key.mode == "and"
+
+    def fn(idx, words, wmask, idf):
+        note()
+        return ranked.topk_dr_batch(idx, words, wmask, idf, k=key.k,
+                                    conjunctive=conjunctive,
+                                    heap_cap=heap_cap, max_pops=key.budget)
+
+    return jax.jit(fn)
+
+
+def make_single_drb(key: ExecutorKey, *, note):
+    """(idx, aux, words, wmask, idf, avg_dl) -> DRResult with (B, k) leaves."""
+    measure = key.measure
+    if key.mode == "and":
+        def one(idx, aux, w, m, idf, avg_dl):
+            return drb.topk_drb_and(idx, aux, w, m, measure, k=key.k,
+                                    idf=idf, avg_dl=avg_dl)
+    else:
+        def one(idx, aux, w, m, idf, avg_dl):
+            return drb.topk_drb_or(idx, aux, w, m, measure, k=key.k,
+                                   max_df_cap=key.df_cap, idf=idf,
+                                   avg_dl=avg_dl)
+
+    def fn(idx, aux, words, wmask, idf, avg_dl):
+        note()
+        return jax.vmap(
+            lambda w, m: one(idx, aux, w, m, idf, avg_dl))(words, wmask)
+
+    return jax.jit(fn)
+
+
+def make_sharded(key: ExecutorKey, *, mesh, shard_axes, heap_cap: int, note):
+    """(sharded, words, wmask, idf) -> DRResult with (B, k) leaves.  ``idf``
+    is the measure-specific *global* table so sharded scores match the
+    single-host backend for every measure, not just tf-idf."""
+    method = f"{key.strategy}-{key.mode}"
+
+    def fn(sharded, words, wmask, idf):
+        note()
+        return distributed.distributed_topk(
+            sharded, words, wmask, k=key.k, method=method, mesh=mesh,
+            shard_axes=shard_axes, heap_cap=heap_cap,
+            max_df_cap=key.df_cap or 2, max_pops=key.budget,
+            measure=key.measure, idf=idf)
+
+    return jax.jit(fn)

@@ -1,0 +1,373 @@
+"""`SearchEngine` — the one public query API over every retrieval backend.
+
+The paper frames WTBC-DR ("no extra space") and WTBC-DRB ("a few small
+bitmaps") as interchangeable strategies answering the same ranked top-k
+queries; the repo additionally runs both over document-sharded device meshes.
+Before this facade, every caller re-assembled the same glue by hand: word-id
+-> frequency-rank mapping, ragged-query padding and masking, idf tables,
+``heap_cap`` / ``max_df_cap`` derivation, DR/BM25 compatibility checks, vmap
+wiring, shard merges.  ``SearchEngine`` owns all of it:
+
+    engine = SearchEngine.build(doc_tokens)            # or .shard(..., n_shards=8)
+    res = engine.search([[w1, w2], [w3]], k=10, mode="and")
+    print(res.hits(0), engine.snippets(res, length=8))
+
+Dispatch goes through jitted executors cached by
+``(strategy, mode, measure, k, batch_shape, budget, df_cap)`` (see
+executors.py), so steady-state traffic never retraces.
+"""
+from __future__ import annotations
+
+import types
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import distributed, drb, scoring, wtbc
+from repro.engine import executors
+from repro.engine.config import EngineConfig
+from repro.engine.results import SearchResults
+
+MODES = ("and", "or")
+STRATEGIES = ("dr", "drb", "auto")
+MEASURES = {"tfidf": scoring.TfIdf(), "bm25": scoring.BM25()}
+
+
+def _normalize_docs(docs, vocab_size: int | None):
+    """Accept a corpus object (``.doc_tokens`` / ``.vocab_size``) or a plain
+    list of per-document word-id arrays; return (list[np.ndarray], vocab_size).
+    Word id 0 is the reserved document separator '$'."""
+    if hasattr(docs, "doc_tokens") and hasattr(docs, "vocab_size"):
+        if vocab_size is not None and vocab_size < int(docs.vocab_size):
+            raise ValueError(f"vocab_size={vocab_size} smaller than the "
+                             f"corpus's own vocab_size={docs.vocab_size}")
+        return list(docs.doc_tokens), int(vocab_size or docs.vocab_size)
+    doc_tokens = [np.asarray(d, dtype=np.int64) for d in docs]
+    if not doc_tokens:
+        raise ValueError("cannot build an engine over zero documents")
+    max_id = max((int(d.max()) for d in doc_tokens if len(d)), default=0)
+    for d in doc_tokens:
+        if len(d) and int(d.min()) < 1:
+            raise ValueError("word id 0 is reserved for the '$' separator; "
+                             "document ids must be >= 1")
+    if vocab_size is None:
+        vocab_size = max_id + 1
+    elif vocab_size <= max_id:
+        raise ValueError(f"vocab_size={vocab_size} too small for max word id "
+                         f"{max_id}")
+    return doc_tokens, int(vocab_size)
+
+
+class SearchEngine:
+    """Facade over the DR / DRB / sharded retrieval backends.
+
+    Construct with :meth:`build` (single index) or :meth:`shard`
+    (document-sharded mesh); query with :meth:`search`; recover text around
+    the hits with :meth:`snippets`.  Instances are cheap handles around
+    immutable device arrays — share one per corpus.
+    """
+
+    def __init__(self, *, _token=None, config, model, n_docs, backend,
+                 idx=None, doc_tokens=None, sharded=None, mesh=None,
+                 shard_axes=None):
+        if _token is not _CTOR_TOKEN:
+            raise TypeError("use SearchEngine.build(...) or "
+                            "SearchEngine.shard(...)")
+        self.config = config
+        self.model = model
+        self.n_docs = n_docs
+        self.backend = backend                  # "single" | "sharded"
+        self._idx = idx
+        # kept only until the lazy DRB build can no longer happen — pinning
+        # the raw tokens forever would defeat the paper's "no space" premise
+        self._doc_tokens = doc_tokens if config.with_drb else None
+        self._aux = None
+        self._sharded = sharded
+        self._mesh = mesh
+        self._shard_axes = shard_axes
+        self._idf_tables: dict[str, jnp.ndarray] = {}
+        self._avg_dl = None
+        self._executors: dict[executors.ExecutorKey, Any] = {}
+        self._trace_counts: dict[executors.ExecutorKey, int] = {}
+        self._shard_slices: dict[int, wtbc.WTBCIndex] = {}
+        if backend == "single":
+            self._heap_cap = 2 * int(idx.n_docs) + 4
+            self._df_np = np.asarray(idx.df)
+        else:
+            self._heap_cap = 2 * int(np.max(np.asarray(sharded.idx.n_docs))) + 4
+            # per-word max over shards: any shard's DRB/OR gather fits the cap
+            self._df_np = np.asarray(sharded.idx.df).max(axis=0)
+        self._max_df_cap = int(self._df_np.max()) + 2
+
+    # -- construction -------------------------------------------------------
+
+    @classmethod
+    def build(cls, docs, config: EngineConfig | None = None, *,
+              vocab_size: int | None = None) -> "SearchEngine":
+        """Build a single-host engine over ``docs`` (a corpus object or a list
+        of per-document word-id arrays, ids >= 1)."""
+        config = config or EngineConfig()
+        doc_tokens, vocab_size = _normalize_docs(docs, vocab_size)
+        idx, model = wtbc.build_index(doc_tokens, vocab_size,
+                                      block=config.block)
+        return cls(_token=_CTOR_TOKEN, config=config, model=model,
+                   n_docs=len(doc_tokens), backend="single", idx=idx,
+                   doc_tokens=doc_tokens)
+
+    @classmethod
+    def shard(cls, docs, n_shards: int, config: EngineConfig | None = None, *,
+              vocab_size: int | None = None, mesh=None,
+              shard_axes: str | tuple[str, ...] = "shards") -> "SearchEngine":
+        """Build a document-sharded engine: one WTBC per device along
+        ``shard_axes`` of ``mesh`` (a 1-D mesh over the first ``n_shards``
+        local devices when ``mesh`` is omitted), global (s,c)-DC code and
+        global idf so shard scores merge exactly."""
+        config = config or EngineConfig()
+        doc_tokens, vocab_size = _normalize_docs(docs, vocab_size)
+        sharded, model = distributed.build_sharded(
+            doc_tokens, vocab_size, n_shards=n_shards, block=config.block,
+            with_drb=config.with_drb, eps=config.eps)
+        if mesh is None:
+            axes = (shard_axes,) if isinstance(shard_axes, str) else tuple(shard_axes)
+            if len(axes) != 1:
+                raise ValueError("pass an explicit mesh for multi-axis sharding")
+            devices = jax.devices()
+            if len(devices) < n_shards:
+                raise ValueError(f"n_shards={n_shards} exceeds the "
+                                 f"{len(devices)} available devices; pass a mesh")
+            mesh = jax.sharding.Mesh(
+                np.array(devices[:n_shards]).reshape(n_shards), axes)
+        return cls(_token=_CTOR_TOKEN, config=config, model=model,
+                   n_docs=len(doc_tokens), backend="sharded", sharded=sharded,
+                   mesh=mesh, shard_axes=shard_axes)
+
+    # -- lazily-derived state ------------------------------------------------
+
+    @property
+    def idx(self) -> wtbc.WTBCIndex:
+        """The single-host index (stacked per-shard index when sharded)."""
+        return self._idx if self.backend == "single" else self._sharded.idx
+
+    @property
+    def aux(self) -> drb.DRBAux:
+        """DRB tf bitmaps, built on first use (single backend)."""
+        if self.backend != "single":
+            return self._sharded.aux
+        if self._aux is None:
+            if not self.config.with_drb:
+                raise ValueError("this engine was built with with_drb=False; "
+                                 "DRB (and BM25) queries are unavailable")
+            self._aux = drb.build_aux(self._idx, self.model, self._doc_tokens,
+                                      eps=self.config.eps)
+            self._doc_tokens = None     # raw tokens no longer needed
+        return self._aux
+
+    def _idf_table(self, measure) -> jnp.ndarray:
+        """Per-measure idf table; on the sharded backend it is derived from
+        the *global* document frequencies (a shard's local df would make
+        shard scores incomparable)."""
+        if measure.name not in self._idf_tables:
+            if self.backend == "single":
+                stats = self._idx
+            else:
+                stats = types.SimpleNamespace(
+                    df=self._sharded.global_df,
+                    n_docs=jnp.int32(self.n_docs))
+            self._idf_tables[measure.name] = measure.idf(stats)
+        return self._idf_tables[measure.name]
+
+    def _avg_doc_len(self) -> jnp.ndarray:
+        if self._avg_dl is None:
+            idx = self._idx
+            self._avg_dl = (jnp.sum(idx.doc_len.astype(jnp.float32))
+                            / idx.n_docs.astype(jnp.float32))
+        return self._avg_dl
+
+    # -- query normalization -------------------------------------------------
+
+    def _encode_queries(self, queries) -> tuple[jnp.ndarray, jnp.ndarray]:
+        """Word ids (array or ragged lists) -> padded (B, Q) frequency ranks
+        + validity mask.  A single flat query becomes a batch of one."""
+        if hasattr(queries, "ndim") or (
+                len(queries) and np.isscalar(queries[0])):
+            arr = np.asarray(queries, dtype=np.int64)
+            if arr.ndim == 1:
+                arr = arr[None, :]
+            if arr.ndim != 2:
+                raise ValueError(f"queries must be (B, Q) or (Q,), got shape "
+                                 f"{arr.shape}")
+            mask = np.ones(arr.shape, dtype=bool)
+        else:
+            rows = [np.asarray(q, dtype=np.int64).reshape(-1) for q in queries]
+            if not rows:
+                raise ValueError("empty query batch")
+            Q = max((len(r) for r in rows), default=0)
+            if Q == 0:
+                raise ValueError("all queries are empty")
+            arr = np.zeros((len(rows), Q), dtype=np.int64)
+            mask = np.zeros((len(rows), Q), dtype=bool)
+            for b, r in enumerate(rows):
+                arr[b, :len(r)] = r
+                mask[b, :len(r)] = True
+        V = self.model.vocab_size
+        bad = mask & ((arr < 1) | (arr >= V))
+        if bad.any():
+            raise ValueError(f"query word ids must be in [1, {V}); offending "
+                             f"ids: {sorted(set(arr[bad].tolist()))[:10]}")
+        ranks = np.where(mask, self.model.rank_of_word[arr], 0)
+        return ranks.astype(np.int32), mask
+
+    # -- dispatch ------------------------------------------------------------
+
+    def _resolve_measure(self, measure):
+        if isinstance(measure, str):
+            try:
+                return MEASURES[measure]
+            except KeyError:
+                raise ValueError(f"unknown measure {measure!r}; expected one "
+                                 f"of {sorted(MEASURES)} or a scoring object")
+        for attr in ("name", "dr_compatible", "idf", "score"):
+            if not hasattr(measure, attr):
+                raise ValueError(f"measure object lacks .{attr}")
+        return measure
+
+    def _resolve_strategy(self, strategy: str, measure, budget) -> str:
+        if strategy not in STRATEGIES:
+            raise ValueError(f"unknown strategy {strategy!r}; expected one of "
+                             f"{STRATEGIES}")
+        if strategy == "auto":
+            strategy = "dr" if measure.dr_compatible else "drb"
+        if strategy == "dr":
+            scoring.assert_dr_compatible(measure)   # BM25 + "dr" -> ValueError
+        else:
+            if not self.config.with_drb:
+                raise ValueError("this engine was built with with_drb=False; "
+                                 "only strategy='dr' is available")
+            if budget is not None:
+                raise ValueError("budget (any-time max_pops) applies to the "
+                                 "DR strategy only")
+        return strategy
+
+    def _df_cap(self, ranks: np.ndarray, mask: np.ndarray) -> int:
+        """DRB/OR gather width: max df among the query words (+2 slack),
+        rounded up to a power of two so nearby workloads share one compiled
+        executor instead of retracing per batch."""
+        m = int(self._df_np[ranks[mask]].max()) if mask.any() else 1
+        cap = 1 << int(m + 2 - 1).bit_length()
+        return min(cap, self._max_df_cap)
+
+    def _executor(self, key: executors.ExecutorKey):
+        ex = self._executors.get(key)
+        if ex is None:
+            def note():
+                self._trace_counts[key] = self._trace_counts.get(key, 0) + 1
+            if key.backend == "sharded":
+                ex = executors.make_sharded(
+                    key, mesh=self._mesh, shard_axes=self._shard_axes,
+                    heap_cap=self._heap_cap, note=note)
+            elif key.strategy == "dr":
+                ex = executors.make_single_dr(key, heap_cap=self._heap_cap,
+                                              note=note)
+            else:
+                ex = executors.make_single_drb(key, note=note)
+            self._executors[key] = ex
+        return ex
+
+    def search(self, queries, *, k: int | None = None, mode: str = "and",
+               strategy: str = "auto", measure="tfidf",
+               budget: int | None = None) -> SearchResults:
+        """Ranked top-k retrieval.
+
+        queries:  (B, Q) / (Q,) array of word ids, or ragged lists of ids.
+        k:        results per query (default: ``config.default_k``).
+        mode:     "and" (conjunctive) or "or" (bag-of-words).
+        strategy: "dr" (no extra space), "drb" (tf bitmaps), or "auto" —
+                  DR when the measure allows it, else DRB (e.g. BM25).
+        measure:  "tfidf", "bm25", or a scoring object.
+        budget:   DR any-time pop budget (per shard when sharded); exact
+                  search when None.  DR only.
+        """
+        k = self.config.default_k if k is None else int(k)
+        if k <= 0:
+            raise ValueError(f"k must be positive, got {k}")
+        if mode not in MODES:
+            raise ValueError(f"unknown mode {mode!r}; expected one of {MODES}")
+        m = self._resolve_measure(measure)
+        strat = self._resolve_strategy(strategy, m, budget)
+        ranks, mask = self._encode_queries(queries)
+        df_cap = (self._df_cap(ranks, mask)
+                  if strat == "drb" and mode == "or" else None)
+        key = executors.ExecutorKey(self.backend, strat, mode, m, k,
+                                    tuple(ranks.shape), budget, df_cap)
+        ex = self._executor(key)
+        words, wmask = jnp.asarray(ranks), jnp.asarray(mask)
+        if self.backend == "sharded":
+            res = ex(self._sharded, words, wmask, self._idf_table(m))
+        elif strat == "dr":
+            res = ex(self.idx, words, wmask, self._idf_table(m))
+        else:
+            res = ex(self.idx, self.aux, words, wmask, self._idf_table(m),
+                     self._avg_doc_len())
+        return SearchResults(docs=res.docs, scores=res.scores,
+                             n_found=res.n_found, work=res.iters, k=k,
+                             mode=mode, strategy=strat, measure=m.name)
+
+    # -- post-processing -----------------------------------------------------
+
+    def _local_index(self, doc: int):
+        """Map a global doc id to (per-shard index pytree, local doc id).
+        Shard slices are memoized — slicing the stacked pytree materializes a
+        copy of every leaf, so pay it once per shard, not once per hit."""
+        if self.backend == "single":
+            return self._idx, doc
+        base = np.asarray(self._sharded.doc_base)
+        s = int(np.searchsorted(base, doc, side="right")) - 1
+        if s not in self._shard_slices:
+            self._shard_slices[s] = jax.tree.map(lambda x: x[s],
+                                                 self._sharded.idx)
+        return self._shard_slices[s], doc - base[s]
+
+    def snippets(self, results: SearchResults,
+                 length: int = 8) -> list[list[np.ndarray]]:
+        """Decode the first ``length`` word ids of every hit document straight
+        from the compressed index (no stored text).  Returns one list per
+        query, one id array per hit (shorter docs come back whole)."""
+        offs = jnp.arange(length, dtype=jnp.int32)
+        out = []
+        for b in range(len(results)):
+            row = []
+            for d, _score in results.hits(b):
+                idx, local = self._local_index(d)
+                n_take = min(length, int(np.asarray(idx.doc_len)[local]))
+                lo = wtbc.doc_start(idx, jnp.int32(local))
+                # fixed decode width (one compile per `length`, not per doc
+                # length); positions clamped in-bounds, then trimmed on host
+                ranks = np.asarray(jax.vmap(
+                    lambda o: wtbc.decode_at(idx, jnp.minimum(lo + o, idx.n - 1))
+                )(offs))[:n_take]
+                row.append(np.asarray(self.model.word_of_rank)[ranks])
+            out.append(row)
+        return out
+
+    # -- introspection -------------------------------------------------------
+
+    @property
+    def stats(self) -> dict:
+        """Executor-cache occupancy and per-key jit trace counts."""
+        return {"executors": len(self._executors),
+                "traces": dict(self._trace_counts)}
+
+    def space_report(self) -> dict[str, int]:
+        """Index (and built-DRB) space, bytes per component."""
+        report = wtbc.space_report(self.idx)
+        aux = self._aux if self.backend == "single" else self._sharded.aux
+        if aux is not None:
+            aux_rep = drb.space_report(aux)
+            report.update({f"drb_{k}": v for k, v in aux_rep.items()})
+            report["total"] += sum(aux_rep.values())
+        return report
+
+
+_CTOR_TOKEN = object()

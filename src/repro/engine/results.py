@@ -1,0 +1,57 @@
+"""Query results returned by :meth:`repro.engine.SearchEngine.search`.
+
+A thin, backend-agnostic wrapper over the kernels' ``DRResult`` leaves: doc
+ids / scores are always batched ``(B, k)`` device arrays (a single query is a
+batch of one), plus the work counters the benchmarks report and the resolved
+routing metadata (which strategy ``"auto"`` actually picked, which measure
+scored, …) so callers never have to reverse-engineer the dispatch.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class SearchResults:
+    """Top-k answers for a batch of queries.
+
+    docs:    (B, k) int32 global document ids, -1 padded past ``n_found``.
+    scores:  (B, k) float32, descending, -inf padded.
+    n_found: (B,)   int32 documents actually found per query.
+    work:    (B,)   int32 backend work counter — DR: queue pops (summed over
+             shards when sharded); DRB/AND: candidate iterations; DRB/OR: the
+             df cap the gather ran with.
+    k / mode / strategy / measure: the resolved query parameters (``strategy``
+             is post-"auto" routing, never "auto" itself).
+    """
+    docs: jnp.ndarray
+    scores: jnp.ndarray
+    n_found: jnp.ndarray
+    work: jnp.ndarray
+    k: int
+    mode: str
+    strategy: str
+    measure: str
+
+    def __post_init__(self):
+        if self.docs.ndim != 2 or self.scores.shape != self.docs.shape:
+            raise ValueError(f"expected batched (B, k) results, got docs "
+                             f"{self.docs.shape} / scores {self.scores.shape}")
+
+    def __len__(self) -> int:
+        """Number of queries in the batch."""
+        return int(self.docs.shape[0])
+
+    def hits(self, b: int = 0) -> list[tuple[int, float]]:
+        """Found ``(doc_id, score)`` pairs of query ``b``, best first."""
+        n = int(self.n_found[b])
+        docs = np.asarray(self.docs[b])[:n]
+        scores = np.asarray(self.scores[b])[:n]
+        return [(int(d), float(s)) for d, s in zip(docs, scores)]
+
+    def doc_ids(self) -> np.ndarray:
+        """(B, k) numpy view of the document ids (-1 padded)."""
+        return np.asarray(self.docs)

@@ -1,10 +1,13 @@
-"""Serving launcher — the paper's system end-to-end.
+"""Serving launcher — the paper's system end-to-end, through `repro.engine`.
 
-Builds a (sharded) WTBC index over a synthetic corpus, then serves batched
-ranked queries (DR / DRB, AND / OR, tf-idf / BM25) with latency stats:
+Builds a :class:`repro.engine.SearchEngine` over a synthetic corpus (single
+index or document-sharded over a local mesh) and serves batched ranked
+queries — DR / DRB / auto routing, AND / OR, tf-idf / BM25 — with latency
+stats.  All query glue (rank mapping, masking, heap/df caps, jit executor
+caching) lives behind ``engine.search``:
 
   PYTHONPATH=src python -m repro.launch.serve --docs 2000 --queries 100 \
-      --method dr-or --k 10
+      --strategy dr --mode or --k 10
 """
 from __future__ import annotations
 
@@ -12,10 +15,9 @@ import argparse
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core import distributed, drb, ranked, scoring, wtbc
+from repro.engine import SearchEngine
 from repro.text import corpus
 
 
@@ -27,9 +29,11 @@ def main():
     ap.add_argument("--queries", type=int, default=50)
     ap.add_argument("--words", type=int, default=3)
     ap.add_argument("--k", type=int, default=10)
-    ap.add_argument("--method", default="dr-or",
-                    choices=("dr-and", "dr-or", "drb-and", "drb-or"))
+    ap.add_argument("--strategy", default="auto", choices=("dr", "drb", "auto"))
+    ap.add_argument("--mode", default="or", choices=("and", "or"))
     ap.add_argument("--measure", default="tfidf", choices=("tfidf", "bm25"))
+    ap.add_argument("--budget", type=int, default=None,
+                    help="DR any-time pop budget (straggler mitigation)")
     ap.add_argument("--shards", type=int, default=0,
                     help="0 = single index; N = document-sharded over a local mesh")
     ap.add_argument("--seed", type=int, default=0)
@@ -37,53 +41,34 @@ def main():
 
     print(f"building corpus: {args.docs} docs ...", flush=True)
     cp = corpus.make_corpus(args.docs, args.mean_doc_len, args.vocab, seed=args.seed)
-    measure = scoring.BM25() if args.measure == "bm25" else scoring.TfIdf()
+    if args.shards:
+        engine = SearchEngine.shard(cp, n_shards=args.shards)
+    else:
+        engine = SearchEngine.build(cp)
 
     df = cp.doc_freqs()
     bands = corpus.fdoc_bands(cp.n_docs)
     queries = corpus.sample_queries(df, bands["ii"], args.queries, args.words,
                                     seed=args.seed)
-
-    if args.shards:
-        sharded, model = distributed.build_sharded(cp.doc_tokens, cp.vocab_size,
-                                                   n_shards=args.shards)
-        mesh = jax.make_mesh((args.shards,), ("shards",))
-        qw = jnp.asarray(model.rank_of_word[queries], jnp.int32)
-        wmask = jnp.ones_like(qw, dtype=bool)
-        run = lambda: distributed.distributed_topk(
-            sharded, qw, wmask, k=args.k, method=args.method, mesh=mesh,
-            shard_axes="shards", measure=measure,
-            max_df_cap=int(df.max()) + 2)
-    else:
-        idx, model = wtbc.build_index(cp.doc_tokens, cp.vocab_size)
-        aux = drb.build_aux(idx, model, cp.doc_tokens)
-        idf = measure.idf(idx)
-        qw = jnp.asarray(model.rank_of_word[queries], jnp.int32)
-        wmask = jnp.ones_like(qw, dtype=bool)
-        conj = args.method.endswith("and")
-        if args.method.startswith("dr"):
-            if args.measure == "bm25":
-                raise SystemExit("BM25 requires DRB (paper §5); use --method drb-*")
-            heap_cap = 2 * int(idx.n_docs) + 4
-            run = lambda: ranked.topk_dr_batch(idx, qw, wmask, idf, k=args.k,
-                                               conjunctive=conj, heap_cap=heap_cap)
-        else:
-            fn = drb.topk_drb_and if conj else drb.topk_drb_or
-            kw = {} if conj else {"max_df_cap": int(df.max()) + 2}
-            run = lambda: jax.vmap(
-                lambda w, m: fn(idx, aux, w, m, measure, k=args.k, **kw))(qw, wmask)
+    run = lambda: engine.search(queries, k=args.k, mode=args.mode,
+                                strategy=args.strategy, measure=args.measure,
+                                budget=args.budget)
 
     print("compiling ...", flush=True)
     t0 = time.time()
-    res = jax.block_until_ready(run())
+    try:
+        res = run()
+    except ValueError as e:          # e.g. BM25 + strategy=dr, budget + drb
+        raise SystemExit(f"error: {e}")
+    jax.block_until_ready(res.scores)
     compile_s = time.time() - t0
     t0 = time.time()
-    res = jax.block_until_ready(run())
+    res = run()
+    jax.block_until_ready(res.scores)
     serve_s = time.time() - t0
-    docs = np.asarray(res.docs if hasattr(res, "docs") else res[0])
     print(f"compile {compile_s:.1f}s | {args.queries} queries in {serve_s*1e3:.1f}ms "
-          f"({serve_s/args.queries*1e3:.2f} ms/query)")
-    print("first query top-k docs:", docs[0][:args.k].tolist())
+          f"({serve_s/args.queries*1e3:.2f} ms/query) | routed to {res.strategy}")
+    print("first query top-k docs:", np.asarray(res.docs[0])[:args.k].tolist())
 
 
 if __name__ == "__main__":

@@ -1,0 +1,47 @@
+"""Guarded hypothesis import for the property-based tests.
+
+``hypothesis`` is a dev extra (``pip install -e .[dev]``, see pyproject.toml),
+not a runtime dependency.  Importing it unconditionally made the whole tier-1
+suite fail at *collection* on minimal installs; a module-level
+``pytest.importorskip`` would instead skip every deterministic test sharing
+the module.  This shim keeps both populations healthy:
+
+* hypothesis installed  -> re-export the real ``given`` / ``settings`` /
+  ``strategies`` and all property tests run as written;
+* hypothesis missing    -> ``given`` rewrites each property test into a
+  zero-argument test whose body is ``pytest.importorskip("hypothesis")``,
+  so exactly the property tests report SKIPPED and everything else runs.
+
+Usage in a test module::
+
+    from _hypothesis_shim import given, settings, st
+"""
+from __future__ import annotations
+
+import pytest
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+    def given(*_args, **_kwargs):
+        def deco(fn):
+            def _skipped_property_test():
+                pytest.importorskip("hypothesis")
+            _skipped_property_test.__name__ = fn.__name__
+            _skipped_property_test.__doc__ = fn.__doc__
+            return _skipped_property_test
+        return deco
+
+    def settings(*_args, **_kwargs):
+        return lambda fn: fn
+
+    class _NullStrategies:
+        """Placeholder so strategy expressions in decorators still evaluate."""
+        def __getattr__(self, _name):
+            return lambda *a, **k: None
+
+    st = _NullStrategies()

@@ -1,7 +1,7 @@
 """bytemap rank/select vs numpy oracles (property-based)."""
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hypothesis_shim import given, settings, st
 
 from repro.core import bytemap
 

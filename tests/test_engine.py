@@ -1,0 +1,238 @@
+"""repro.engine.SearchEngine — facade contract tests.
+
+* search agrees with the ``ranked.topk_bruteforce`` oracle across every
+  (strategy, mode, measure) combination the measures permit,
+* invalid routing (DR + BM25, budget + DRB, bad ids/modes) is rejected,
+* the executor cache actually prevents retracing (jax.jit trace counting),
+* a full facade round-trip build -> search -> snippets reconstructs the
+  indexed text.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import ranked, scoring
+from repro.engine import EngineConfig, SearchEngine
+from repro.text import corpus
+
+
+@pytest.fixture(scope="module")
+def engine_corpus():
+    return corpus.make_corpus(n_docs=90, mean_doc_len=50, vocab_size=400, seed=9)
+
+
+@pytest.fixture(scope="module")
+def engine(engine_corpus):
+    return SearchEngine.build(engine_corpus, EngineConfig(block=512))
+
+
+@pytest.fixture(scope="module")
+def query_batch(engine_corpus):
+    df = engine_corpus.doc_freqs()
+    pool = np.flatnonzero((df >= 2) & (df <= 40))
+    rng = np.random.default_rng(4)
+    return np.stack([rng.choice(pool, 3, replace=False) for _ in range(3)])
+
+
+def _bruteforce(engine, measure, word_ids, k, conjunctive):
+    """Oracle ranking on raw tf (tf-idf weighting) for one query row."""
+    words = jnp.asarray(engine.model.rank_of_word[word_ids], jnp.int32)
+    wmask = jnp.ones(len(word_ids), bool)
+    idf = measure.idf(engine.idx)
+    return ranked.topk_bruteforce(engine.idx, words, wmask, idf, k=k,
+                                  conjunctive=conjunctive)
+
+
+@pytest.mark.parametrize("strategy", ["dr", "drb", "auto"])
+@pytest.mark.parametrize("mode", ["and", "or"])
+def test_search_matches_bruteforce_tfidf(engine, query_batch, strategy, mode):
+    res = engine.search(query_batch, k=10, mode=mode, strategy=strategy,
+                        measure="tfidf")
+    assert res.strategy == ("dr" if strategy == "auto" else strategy)
+    for b in range(len(query_batch)):
+        bf = _bruteforce(engine, scoring.TfIdf(), query_batch[b], 10,
+                         conjunctive=(mode == "and"))
+        assert int(bf.n_found) == int(res.n_found[b])
+        np.testing.assert_allclose(
+            np.sort(np.asarray(res.scores[b]))[::-1],
+            np.sort(np.asarray(bf.scores))[::-1], atol=1e-4)
+
+
+@pytest.mark.parametrize("strategy", ["drb", "auto"])
+@pytest.mark.parametrize("mode", ["and", "or"])
+def test_search_bm25_ranks_match_oracle(engine, query_batch, strategy, mode):
+    """BM25 routes to DRB; verify against a direct dense BM25 scorer."""
+    res = engine.search(query_batch, k=10, mode=mode, strategy=strategy,
+                        measure="bm25")
+    assert res.strategy == "drb"
+    measure = scoring.BM25()
+    idx = engine.idx
+    idf = measure.idf(idx)
+    avg_dl = float(np.asarray(idx.doc_len, np.float64).sum() / int(idx.n_docs))
+    import jax
+
+    from repro.core import wtbc
+    tf_all = jax.jit(lambda ws: jax.vmap(lambda d: jax.vmap(
+        lambda w: wtbc.count_doc(idx, w, d))(ws))(
+            jnp.arange(int(idx.n_docs), dtype=jnp.int32)))
+    for b in range(len(query_batch)):
+        words = jnp.asarray(engine.model.rank_of_word[query_batch[b]], jnp.int32)
+        tf = np.asarray(tf_all(words))                               # (N, Q)
+        scores = np.asarray(measure.score(
+            jnp.asarray(tf), jnp.where(jnp.ones(3, bool), idf[words], 0.0),
+            idx.doc_len, jnp.float32(avg_dl)))
+        if mode == "and":
+            ok = (tf > 0).all(axis=1)
+        else:
+            ok = (tf > 0).any(axis=1)
+        scores = np.where(ok, scores, -np.inf)
+        expect = np.sort(scores)[::-1][:10]
+        got = np.asarray(res.scores[b])
+        np.testing.assert_allclose(np.where(np.isfinite(expect), expect, -np.inf),
+                                   got, atol=1e-3)
+
+
+def test_dr_rejects_bm25(engine, query_batch):
+    with pytest.raises(ValueError, match="not monotone"):
+        engine.search(query_batch, k=5, strategy="dr", measure="bm25")
+
+
+def test_budget_rejected_on_drb(engine, query_batch):
+    with pytest.raises(ValueError, match="budget"):
+        engine.search(query_batch, k=5, strategy="drb", budget=10)
+
+
+def test_input_validation(engine, query_batch):
+    with pytest.raises(ValueError, match="mode"):
+        engine.search(query_batch, mode="xor")
+    with pytest.raises(ValueError, match="strategy"):
+        engine.search(query_batch, strategy="fancy")
+    with pytest.raises(ValueError, match="measure"):
+        engine.search(query_batch, measure="pagerank")
+    with pytest.raises(ValueError, match="word ids"):
+        engine.search(np.zeros((2, 2), np.int64), k=3)   # id 0 is reserved
+    with pytest.raises(ValueError, match="k must be positive"):
+        engine.search(query_batch, k=0)
+
+
+def test_ragged_and_single_queries(engine, query_batch):
+    w0, w1 = int(query_batch[0, 0]), int(query_batch[0, 1])
+    single = engine.search([w0], k=5, mode="or")
+    assert len(single) == 1
+    ragged = engine.search([[w0], [w0, w1]], k=5, mode="or")
+    assert len(ragged) == 2
+    # the padded row must score identically to the flat single query
+    np.testing.assert_allclose(np.asarray(single.scores[0]),
+                               np.asarray(ragged.scores[0]), atol=1e-6)
+
+
+def test_executor_cache_no_retrace(engine_corpus, query_batch):
+    engine = SearchEngine.build(engine_corpus, EngineConfig(block=512))
+    engine.search(query_batch, k=5, mode="or", strategy="dr")
+    traces_after_first = dict(engine.stats["traces"])
+    assert sum(traces_after_first.values()) == 1
+    # same (strategy, mode, measure, k, batch shape) -> cache hit, no retrace
+    engine.search(query_batch, k=5, mode="or", strategy="dr")
+    assert engine.stats["traces"] == traces_after_first
+    assert engine.stats["executors"] == 1
+    # different k -> new executor, exactly one new trace
+    engine.search(query_batch, k=7, mode="or", strategy="dr")
+    assert engine.stats["executors"] == 2
+    assert sum(engine.stats["traces"].values()) == 2
+    # different batch shape -> new executor too
+    engine.search(query_batch[:1], k=5, mode="or", strategy="dr")
+    assert engine.stats["executors"] == 3
+    assert sum(engine.stats["traces"].values()) == 3
+
+
+def test_round_trip_build_search_snippets():
+    """Facade round-trip on a known tiny corpus: the top hit is the right
+    document and its snippet decodes back to the document's own tokens."""
+    rng = np.random.default_rng(0)
+    docs = [rng.integers(1, 30, size=rng.integers(5, 15)).astype(np.int64)
+            for _ in range(12)]
+    target_word = 31
+    docs[7] = np.concatenate([np.full(6, target_word, np.int64), docs[7]])
+    engine = SearchEngine.build(docs, vocab_size=40)
+    res = engine.search([[target_word]], k=3, mode="and")
+    hits = res.hits(0)
+    assert hits and hits[0][0] == 7
+    snippet = engine.snippets(res, length=6)[0][0]
+    np.testing.assert_array_equal(snippet, docs[7][:6])
+    # brute-force agreement on the same round-trip
+    bf = _bruteforce(engine, scoring.TfIdf(), [target_word], 3, conjunctive=True)
+    np.testing.assert_allclose(np.asarray(res.scores[0]),
+                               np.asarray(bf.scores), atol=1e-5)
+
+
+def test_with_drb_false_blocks_drb():
+    docs = [np.arange(1, 8, dtype=np.int64) for _ in range(4)]
+    engine = SearchEngine.build(docs, EngineConfig(with_drb=False),
+                                vocab_size=16)
+    with pytest.raises(ValueError, match="with_drb"):
+        engine.search([[2, 3]], k=2, strategy="drb")
+    # DR still works
+    res = engine.search([[2, 3]], k=2, strategy="auto")
+    assert res.strategy == "dr"
+
+
+@pytest.mark.slow
+def test_sharded_facade_matches_single():
+    """SearchEngine.shard == SearchEngine.build rankings (subprocess: needs
+    simulated devices, and XLA's device count is locked at first jax init)."""
+    import os
+    import subprocess
+    import sys
+    import textwrap
+
+    script = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+        import numpy as np
+        from repro.engine import SearchEngine
+        from repro.text import corpus
+
+        cp = corpus.make_corpus(n_docs=48, mean_doc_len=30, vocab_size=200, seed=6)
+        single = SearchEngine.build(cp)
+        sharded = SearchEngine.shard(cp, n_shards=4)
+        df = cp.doc_freqs()
+        pool = np.flatnonzero((df >= 2) & (df <= 30))
+        rng = np.random.default_rng(3)
+        qs = np.stack([rng.choice(pool, 2, replace=False) for _ in range(3)])
+        fails = 0
+        combos = [("and", "dr", "tfidf"), ("or", "dr", "tfidf"),
+                  ("and", "drb", "tfidf"), ("or", "drb", "tfidf"),
+                  ("and", "drb", "bm25"), ("or", "drb", "bm25")]
+        for mode, strategy, measure in combos:
+            a = single.search(qs, k=8, mode=mode, strategy=strategy,
+                              measure=measure)
+            b = sharded.search(qs, k=8, mode=mode, strategy=strategy,
+                               measure=measure)
+            for q in range(3):
+                if int(a.n_found[q]) != int(b.n_found[q]) or not np.allclose(
+                        np.sort(np.asarray(a.scores[q])),
+                        np.sort(np.asarray(b.scores[q])), atol=1e-4):
+                    fails += 1
+                    print("MISMATCH", mode, strategy, measure, q)
+        sn = sharded.snippets(sharded.search(qs, k=3, mode="or"), length=4)
+        assert len(sn) == 3
+        print("FAILS", fails)
+        raise SystemExit(1 if fails else 0)
+    """)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    r = subprocess.run([sys.executable, "-c", script], env=env, cwd=root,
+                       capture_output=True, text=True, timeout=1200)
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr[-3000:]}"
+
+
+def test_dr_budget_is_anytime_prefix(engine, query_batch):
+    """A budgeted DR search returns a prefix of the exact ranking."""
+    exact = engine.search(query_batch[:1], k=10, mode="or", strategy="dr")
+    budgeted = engine.search(query_batch[:1], k=10, mode="or", strategy="dr",
+                             budget=5)
+    n = int(budgeted.n_found[0])
+    assert int(budgeted.work[0]) <= 5
+    np.testing.assert_allclose(np.asarray(budgeted.scores[0])[:n],
+                               np.asarray(exact.scores[0])[:n], atol=1e-5)

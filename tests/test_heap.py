@@ -1,7 +1,7 @@
 """Array-heap invariants (the engine under Algorithm 1)."""
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hypothesis_shim import given, settings, st
 
 from repro.core import heap as H
 

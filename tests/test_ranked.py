@@ -7,7 +7,7 @@ score must match as sets.
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_shim import given, settings, st
 
 from repro.core import ranked, wtbc
 

@@ -1,7 +1,7 @@
 """(s,c)-Dense Code: roundtrip, structure, optimality (property-based)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_shim import given, settings, st
 
 from repro.core import scdc
 

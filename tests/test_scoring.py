@@ -2,7 +2,7 @@
 Algorithm 1's correctness rests on), BM25 shape/behavior."""
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hypothesis_shim import given, settings, st
 
 from repro.core import scoring
 

@@ -1,7 +1,7 @@
 """WTBC decode/count/locate vs direct token-array oracles."""
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hypothesis_shim import given, settings, st
 
 from repro.core import wtbc
 from repro.text import corpus
