@@ -22,7 +22,8 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (common, distributed_scaling, table1_compression,
-                            table2_conjunctive, table3_bagofwords)
+                            table2_conjunctive, table3_bagofwords,
+                            table4_positional)
 
     t0 = time.time()
     print("# building benchmark corpus ...", file=sys.stderr, flush=True)
@@ -46,6 +47,11 @@ def main() -> None:
                       band_names=("i", "ii", "iii"))
     table2_conjunctive.run(bench, conjunctive=True, **sweep)
     table3_bagofwords.run(bench, **sweep3)
+    if args.full:
+        table4_positional.run(bench, n_queries=32, words_list=(2, 3, 4),
+                              ks=(10, 20), windows=(4, 16, 64))
+    else:
+        table4_positional.run(bench)
 
     if not args.skip_distributed:
         distributed_scaling.run()

@@ -1,0 +1,50 @@
+"""Table 4 (beyond-paper): positional ranked retrieval — phrase and
+proximity (near) top-k over the WTBC, ms/query by query length and window.
+
+Phrase queries are n-grams lifted from the corpus itself (uniformly random
+word tuples almost never co-occur adjacently, which would benchmark the empty
+path); near queries reuse the same n-grams — tokens that do appear together —
+across a sweep of window widths.  Everything runs through
+``repro.engine.SearchEngine`` like Tables 2/3; per-query time is batch time /
+batch size over compiled executors.
+"""
+from __future__ import annotations
+
+from benchmarks import common
+from repro.text import corpus
+
+
+def ngram_queries(cp, n_queries: int, n_words: int, seed: int = 0):
+    """Corpus n-grams under a df cap — the near sweep is O(sum occ), so
+    Zipf-head stopword grams would benchmark the worst case, not the typical
+    query."""
+    return corpus.sample_ngram_queries(
+        cp.doc_tokens, n_queries, n_words, seed=seed, df=cp.doc_freqs(),
+        df_cap=max(2, cp.n_docs // 3))
+
+
+def run(bench: common.Bench | None = None, *, n_queries: int = 16,
+        words_list=(2, 3), ks=(10,), windows=(4, 16),
+        print_rows=print) -> dict:
+    b = bench or common.build()
+    results = {}
+    for n_words in words_list:
+        qs = ngram_queries(b.cp, n_queries, n_words, seed=n_words)
+        for k in ks:
+            fn = lambda: b.engine.search(qs, k=k, mode="phrase").scores
+            ms = common.time_fn(fn) / n_queries * 1e3
+            name = f"table4/PHRASE_w{n_words}_k{k}"
+            results[name] = ms
+            print_rows(common.csv_row(name, ms * 1e3, f"{ms:.3f}ms/query"))
+            for win in windows:
+                fn = lambda: b.engine.search(qs, k=k, mode="near",
+                                             window=win).scores
+                ms = common.time_fn(fn) / n_queries * 1e3
+                name = f"table4/NEAR{win}_w{n_words}_k{k}"
+                results[name] = ms
+                print_rows(common.csv_row(name, ms * 1e3, f"{ms:.3f}ms/query"))
+    return results
+
+
+if __name__ == "__main__":
+    run()

@@ -36,21 +36,32 @@ def main():
     df = cp.doc_freqs()
     bands = corpus.fdoc_bands(cp.n_docs)
     queries = corpus.sample_queries(df, bands["ii"], args.batch, 3, seed=1)
+    # positional workloads: bigrams lifted from the documents themselves, so
+    # phrase queries actually have occurrences to rank
+    grams = corpus.sample_ngram_queries(cp.doc_tokens, args.batch, 2, seed=2)
 
-    for name, kw in [
-        ("DR/AND", dict(mode="and", strategy="dr")),
-        ("DR/OR", dict(mode="or", strategy="dr")),
-        ("DRB/AND", dict(mode="and", strategy="drb")),
-        ("BM25/OR", dict(mode="or", strategy="auto", measure="bm25")),
+    for name, qs, kw in [
+        ("DR/AND", queries, dict(mode="and", strategy="dr")),
+        ("DR/OR", queries, dict(mode="or", strategy="dr")),
+        ("DRB/AND", queries, dict(mode="and", strategy="drb")),
+        ("BM25/OR", queries, dict(mode="or", strategy="auto", measure="bm25")),
+        ("PHRASE", grams, dict(mode="phrase")),
+        ("NEAR/8", grams, dict(mode="near", window=8)),
     ]:
-        run = lambda: engine.search(queries, k=args.k, **kw)
+        run = lambda: engine.search(qs, k=args.k, **kw)
         jax.block_until_ready(run().scores)        # compile
         t0 = time.time()
         res = run()
         jax.block_until_ready(res.scores)
         dt = (time.time() - t0) / args.batch * 1e3
+        extra = ""
+        if res.match_pos is not None:
+            m = res.matches(0)
+            if m:
+                d, _, p, l = m[0]
+                extra = f" | q0 match: doc {d} @ {p} width {l}"
         print(f"{name:8s} {dt:7.2f} ms/query | "
-              f"top doc of q0: {int(np.asarray(res.docs)[0, 0])}")
+              f"top doc of q0: {int(np.asarray(res.docs)[0, 0])}{extra}")
     print(f"executor cache: {engine.stats['executors']} compiled programs")
 
 

@@ -1,0 +1,251 @@
+"""Positional ranked retrieval over the WTBC: phrase and proximity queries.
+
+The paper exploits the WTBC's ``locate``/``select`` machinery only for ranked
+conjunctive/disjunctive queries.  This module extends the *same structure* —
+at zero extra space — to two positional workloads in the spirit of the
+wavelet-tree positional algorithms of Gagie–Navarro–Puglisi ("New Algorithms
+on Wavelet Trees and Applications to Information Retrieval"):
+
+* **phrase**: the query words must occur *consecutively, in order*.  The
+  rarest query word anchors the scan: for each of its occurrences (one
+  ``locate`` walk each) the candidate phrase start is checked by decoding the
+  neighbouring root positions (one ``decode_at`` walk per query word) — no
+  materialized text, no per-doc position buffers, O(occ_min · Q) tree walks.
+* **near** (proximity): every query word must occur inside some window of at
+  most ``window`` consecutive tokens of a document.  A Q-way cursor merge
+  enumerates all query-word occurrences in text order (one ``locate`` per
+  step) and runs the classical minimal-cover sweep: at each occurrence the
+  best window ending there spans back to the *oldest* last-seen occurrence
+  among the query words, so the per-document minimal window falls out of one
+  O(Σ occ_w) pass.
+
+Both modes score documents with any additive per-word measure (tf-idf, BM25):
+phrase scores use the phrase tf for every query word (a phrase behaves as a
+single virtual term weighted by its words' idfs); near scores use the full
+per-document tf vector, with the window acting as an eligibility filter.
+Results carry match positions (doc-relative start of the first phrase match /
+of the minimal window) so callers can highlight without storing text.
+
+Everything is jit/vmap-compatible: ``topk_positional`` is one jitted program,
+``topk_positional_batch`` is its vmap over (B, Q) query batches, mirroring
+``ranked.topk_dr`` / ``topk_dr_batch``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import wtbc
+from repro.core.wtbc import WTBCIndex
+
+INT32_MAX = jnp.int32(2**31 - 1)
+
+
+class PositionalResult(NamedTuple):
+    docs: jnp.ndarray       # (k,) int32, -1 padded, descending score
+    scores: jnp.ndarray     # (k,) float32, -inf padded
+    n_found: jnp.ndarray    # () int32
+    iters: jnp.ndarray      # () int32 — occurrence-scan steps (work metric)
+    match_pos: jnp.ndarray  # (k,) int32 doc-relative match start, -1 padded
+    match_len: jnp.ndarray  # (k,) int32 match width in tokens, -1 padded
+
+
+def query_offsets(wmask: jnp.ndarray) -> jnp.ndarray:
+    """Offset of each valid slot within the phrase (position among the valid
+    slots, in slot order); garbage for invalid slots — mask before use."""
+    return jnp.cumsum(wmask.astype(jnp.int32)) - 1
+
+
+def doc_positions(idx: WTBCIndex, w: jnp.ndarray, d: jnp.ndarray,
+                  cap: int) -> jnp.ndarray:
+    """Doc-relative positions of word-rank ``w``'s occurrences in document
+    ``d``, -1 padded to the static ``cap`` (per-document occurrence-position
+    extraction: one count + one ``locate`` per occurrence)."""
+    lo, hi = wtbc.segment_extent(idx, d, d + 1)
+    before = wtbc.count_range(idx, w, jnp.int32(0), lo)
+    tf = wtbc.count_range(idx, w, lo, hi)
+    js = jnp.arange(cap, dtype=jnp.int32)
+    pos = jax.vmap(
+        lambda j: wtbc.locate(idx, w, before + jnp.minimum(j, tf - 1) + 1))(js)
+    return jnp.where(js < tf, pos - lo, -1)
+
+
+# ---------------------------------------------------------------------------
+# phrase: anchor scan on the rarest word + decode adjacency check
+# ---------------------------------------------------------------------------
+
+def phrase_tables(idx: WTBCIndex, words: jnp.ndarray, wmask: jnp.ndarray
+                  ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Per-document phrase term frequency and first match position.
+
+    Returns ``(tf (N,), first_pos (N,), iters)`` where ``tf[d]`` counts exact
+    occurrences of the phrase formed by the valid slots of ``words`` (in slot
+    order) inside document ``d`` and ``first_pos[d]`` is the doc-relative
+    start of the first one (-1 when none).  Duplicate query words are handled
+    naturally — adjacency is checked against the decoded text itself.
+    """
+    N = idx.sep_pos.shape[0]
+    offs = query_offsets(wmask)
+    q_len = jnp.sum(wmask.astype(jnp.int32))
+    occ_w = jnp.where(wmask, idx.occ[words], INT32_MAX)
+    qstar = jnp.argmin(occ_w)
+    wstar = words[qstar]
+    ostar = offs[qstar]
+    n_anchor = jnp.where(jnp.any(wmask), idx.occ[wstar], 0)
+
+    tf0 = jnp.zeros((N + 1,), jnp.int32)
+    first0 = jnp.full((N + 1,), INT32_MAX, jnp.int32)
+
+    def cond(st):
+        j, _, _ = st
+        return j <= n_anchor
+
+    def body(st):
+        j, tf, first = st
+        p = wtbc.locate(idx, wstar, j)
+        start = p - ostar
+        d = wtbc.doc_of_pos(idx, p)
+        lo = wtbc.doc_start(idx, d)
+        hi = wtbc.doc_end(idx, d)
+        inb = (start >= lo) & (start + q_len <= hi)
+        slot_pos = jnp.clip(start + offs, 0, idx.n - 1)
+        dec = jax.vmap(lambda pp: wtbc.decode_at(idx, pp))(slot_pos)
+        match = inb & jnp.all(~wmask | (dec == words))
+        at = jnp.where(match, jnp.minimum(d, N), N)
+        tf = tf.at[at].add(1)
+        first = first.at[at].min(start - lo)
+        return j + 1, tf, first
+
+    iters, tf, first = jax.lax.while_loop(
+        cond, body, (jnp.int32(1), tf0, first0))
+    tf, first = tf[:N], first[:N]
+    return tf, jnp.where(tf > 0, first, -1), iters - 1
+
+
+# ---------------------------------------------------------------------------
+# near: Q-way occurrence merge + minimal-cover sweep
+# ---------------------------------------------------------------------------
+
+def near_tables(idx: WTBCIndex, words: jnp.ndarray, wmask: jnp.ndarray
+                ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Per-document tf vector and minimal cover window over the query words.
+
+    Returns ``(tf (Q, N), min_win (N,), win_pos (N,), iters)``: ``min_win[d]``
+    is the width (in tokens) of the smallest window of document ``d``
+    containing at least one occurrence of every valid query word (INT32_MAX
+    when no such window exists), ``win_pos[d]`` its doc-relative start (-1
+    when none).  One text-order sweep over all query-word occurrences: at each
+    occurrence the candidate window spans back to the oldest last-seen
+    occurrence among the words, which is the classical exact minimal-cover
+    recurrence.  Ties (equal width) resolve to the leftmost window.
+    """
+    Q = words.shape[0]
+    N = idx.sep_pos.shape[0]
+    occ_w = jnp.where(wmask, idx.occ[words], 0)
+    absent = jnp.any(wmask & (occ_w == 0))
+
+    j0 = jnp.ones((Q,), jnp.int32)
+    p_first = jax.vmap(lambda w: wtbc.locate(idx, w, jnp.int32(1)))(words)
+    p0 = jnp.where(wmask & (occ_w > 0) & ~absent, p_first, INT32_MAX)
+    last0 = jnp.full((Q,), -1, jnp.int32)
+    tf0 = jnp.zeros((Q, N + 1), jnp.int32)
+    win0 = jnp.full((N + 1,), INT32_MAX, jnp.int32)
+    pos0 = jnp.full((N + 1,), -1, jnp.int32)
+
+    def cond(st):
+        _, p, *_ = st
+        return jnp.min(p) < INT32_MAX
+
+    def body(st):
+        j, p, last, tf, win, pos, it = st
+        qm = jnp.argmin(p)
+        pm = p[qm]
+        last = last.at[qm].set(pm)
+        d = jnp.minimum(wtbc.doc_of_pos(idx, pm), N)
+        lo = wtbc.doc_start(idx, jnp.minimum(d, idx.n_docs - 1))
+        tf = tf.at[qm, d].add(1)
+        covered = jnp.all(~wmask | (last >= lo))
+        wstart = jnp.min(jnp.where(wmask, last, INT32_MAX))
+        width = pm - wstart + 1
+        better = covered & (width < win[d])
+        win = win.at[d].set(jnp.where(better, width, win[d]))
+        pos = pos.at[d].set(jnp.where(better, wstart - lo, pos[d]))
+        jn = j[qm] + 1
+        pn = jnp.where(jn <= idx.occ[words[qm]],
+                       wtbc.locate(idx, words[qm], jn), INT32_MAX)
+        return (j.at[qm].set(jn), p.at[qm].set(pn), last, tf, win, pos,
+                it + 1)
+
+    j, p, last, tf, win, pos, iters = jax.lax.while_loop(
+        cond, body, (j0, p0, last0, tf0, win0, pos0, jnp.int32(0)))
+    return tf[:, :N], win[:N], pos[:N], iters
+
+
+# ---------------------------------------------------------------------------
+# ranked top-k entry points (mirror ranked.topk_dr / topk_dr_batch)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("k", "phrase", "measure"))
+def topk_positional(idx: WTBCIndex, words: jnp.ndarray, wmask: jnp.ndarray,
+                    idf: jnp.ndarray, *, k: int, phrase: bool, measure,
+                    window: jnp.ndarray | int | None = None,
+                    avg_dl: jnp.ndarray | None = None) -> PositionalResult:
+    """Ranked positional top-k.  ``words`` (Q,) word-ranks, ``wmask`` (Q,)
+    valid-slot mask (valid slots form a prefix), ``idf`` (V,) the measure's
+    idf table.
+
+    phrase=True:  exact consecutive in-order match of the valid words; a
+                  document's tf is its phrase-occurrence count and every
+                  query word is scored with it.
+    phrase=False: proximity — eligible documents have a minimal cover window
+                  of width <= ``window`` (required); scores use the full
+                  per-document tf vector.
+    """
+    N = idx.sep_pos.shape[0]
+    idf_w = jnp.where(wmask, idf[words], 0.0).astype(jnp.float32)
+    if avg_dl is None:
+        avg_dl = (jnp.sum(idx.doc_len.astype(jnp.float32))
+                  / idx.n_docs.astype(jnp.float32))
+
+    if phrase:
+        tf_phrase, first_pos, iters = phrase_tables(idx, words, wmask)
+        tf_mat = tf_phrase[:, None] * wmask          # (N, Q)
+        eligible = tf_phrase > 0
+        match_pos = first_pos
+        match_len = jnp.full((N,), jnp.sum(wmask.astype(jnp.int32)), jnp.int32)
+    else:
+        if window is None:
+            raise ValueError("proximity search requires a window")
+        tf_q, min_win, win_pos, iters = near_tables(idx, words, wmask)
+        tf_mat = tf_q.T * wmask                      # (N, Q)
+        eligible = min_win <= jnp.asarray(window, jnp.int32)
+        match_pos = win_pos
+        match_len = jnp.where(min_win < INT32_MAX, min_win, -1)
+
+    scores = measure.score(tf_mat, idf_w, idx.doc_len, avg_dl)
+    scores = jnp.where(eligible, scores, -jnp.inf)
+    top_s, top_d = jax.lax.top_k(scores, k)
+    found = jnp.sum(top_s > -jnp.inf).astype(jnp.int32)
+    ok = top_s > -jnp.inf
+    return PositionalResult(
+        docs=jnp.where(ok, top_d, -1).astype(jnp.int32),
+        scores=top_s.astype(jnp.float32),
+        n_found=found,
+        iters=iters,
+        match_pos=jnp.where(ok, match_pos[top_d], -1),
+        match_len=jnp.where(ok, match_len[top_d], -1),
+    )
+
+
+def topk_positional_batch(idx: WTBCIndex, words: jnp.ndarray,
+                          wmask: jnp.ndarray, idf: jnp.ndarray, *, k: int,
+                          phrase: bool, measure,
+                          window: jnp.ndarray | int | None = None,
+                          avg_dl: jnp.ndarray | None = None) -> PositionalResult:
+    """Batched positional queries: ``words``/``wmask`` are (B, Q)."""
+    fn = functools.partial(topk_positional, k=k, phrase=phrase,
+                           measure=measure, window=window, avg_dl=avg_dl)
+    return jax.vmap(lambda w, m: fn(idx, w, m, idf))(words, wmask)

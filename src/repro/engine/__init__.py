@@ -14,8 +14,9 @@ See :class:`SearchEngine` for the full contract, :class:`EngineConfig` for
 build knobs, and :class:`SearchResults` for the result object.
 """
 from repro.engine.config import EngineConfig
-from repro.engine.facade import MEASURES, MODES, STRATEGIES, SearchEngine
+from repro.engine.facade import (MEASURES, MODES, POSITIONAL_MODES,
+                                 STRATEGIES, SearchEngine)
 from repro.engine.results import SearchResults
 
 __all__ = ["EngineConfig", "SearchEngine", "SearchResults",
-           "MEASURES", "MODES", "STRATEGIES"]
+           "MEASURES", "MODES", "POSITIONAL_MODES", "STRATEGIES"]

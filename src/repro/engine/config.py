@@ -26,14 +26,21 @@ class EngineConfig:
                ``with_drb=False`` skips/forbids the build on both backends —
                and therefore BM25 / explicit ``strategy="drb"`` queries.
     default_k: results per query when ``search`` is called without ``k``.
+    default_window: proximity width (tokens) when ``search(mode="near")`` is
+               called without ``window``.  Dynamic at query time — changing
+               it never recompiles an executor.
     """
     block: int = bytemap.DEFAULT_BLOCK
     eps: float = 1e-6
     with_drb: bool = True
     default_k: int = 10
+    default_window: int = 8
 
     def __post_init__(self):
         if self.block <= 0:
             raise ValueError(f"block must be positive, got {self.block}")
         if self.default_k <= 0:
             raise ValueError(f"default_k must be positive, got {self.default_k}")
+        if self.default_window <= 0:
+            raise ValueError(f"default_window must be positive, got "
+                             f"{self.default_window}")

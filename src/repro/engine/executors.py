@@ -17,14 +17,19 @@ from typing import Any, NamedTuple
 
 import jax
 
-from repro.core import distributed, drb, ranked
+from repro.core import distributed, drb, positional, ranked
 
 
 class ExecutorKey(NamedTuple):
-    """Hashable cache key — everything that forces a distinct XLA program."""
+    """Hashable cache key — everything that forces a distinct XLA program.
+
+    The positional modes ("phrase" / "near") get distinct keys through
+    ``mode``; the proximity ``window`` is deliberately *not* part of the key —
+    it is a traced scalar, so every window width shares one compiled program.
+    """
     backend: str          # "single" | "sharded"
     strategy: str         # "dr" | "drb" (post-"auto" resolution)
-    mode: str             # "and" | "or"
+    mode: str             # "and" | "or" | "phrase" | "near"
     measure: Any          # frozen scoring dataclass (hashable, carries params)
     k: int
     batch_shape: tuple[int, int]   # (B, Q)
@@ -62,6 +67,22 @@ def make_single_drb(key: ExecutorKey, *, note):
         note()
         return jax.vmap(
             lambda w, m: one(idx, aux, w, m, idf, avg_dl))(words, wmask)
+
+    return jax.jit(fn)
+
+
+def make_single_positional(key: ExecutorKey, *, note):
+    """(idx, words, wmask, idf, window, avg_dl) -> PositionalResult with
+    (B, k) leaves.  ``window`` is a traced int32 scalar (ignored by phrase),
+    so proximity widths never force a retrace."""
+    phrase = key.mode == "phrase"
+    measure = key.measure
+
+    def fn(idx, words, wmask, idf, window, avg_dl):
+        note()
+        return positional.topk_positional_batch(
+            idx, words, wmask, idf, k=key.k, phrase=phrase, measure=measure,
+            window=window, avg_dl=avg_dl)
 
     return jax.jit(fn)
 

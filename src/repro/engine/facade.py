@@ -11,6 +11,8 @@ wiring, shard merges.  ``SearchEngine`` owns all of it:
     engine = SearchEngine.build(doc_tokens)            # or .shard(..., n_shards=8)
     res = engine.search([[w1, w2], [w3]], k=10, mode="and")
     print(res.hits(0), engine.snippets(res, length=8))
+    res = engine.search([[w1, w2]], mode="phrase")     # or mode="near", window=6
+    print(res.matches(0))                              # (doc, score, pos, len)
 
 Dispatch goes through jitted executors cached by
 ``(strategy, mode, measure, k, batch_shape, budget, df_cap)`` (see
@@ -25,12 +27,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import distributed, drb, scoring, wtbc
+from repro.core import distributed, drb, positional, scoring, wtbc
 from repro.engine import executors
 from repro.engine.config import EngineConfig
 from repro.engine.results import SearchResults
 
-MODES = ("and", "or")
+MODES = ("and", "or", "phrase", "near")
+POSITIONAL_MODES = ("phrase", "near")
 STRATEGIES = ("dr", "drb", "auto")
 MEASURES = {"tfidf": scoring.TfIdf(), "bm25": scoring.BM25()}
 
@@ -233,10 +236,23 @@ class SearchEngine:
                 raise ValueError(f"measure object lacks .{attr}")
         return measure
 
-    def _resolve_strategy(self, strategy: str, measure, budget) -> str:
+    def _resolve_strategy(self, strategy: str, measure, budget,
+                          mode: str = "and") -> str:
         if strategy not in STRATEGIES:
             raise ValueError(f"unknown strategy {strategy!r}; expected one of "
                              f"{STRATEGIES}")
+        if mode in POSITIONAL_MODES:
+            # phrase/near run on the bare WTBC (locate/decode walks) — the
+            # "no extra space" family; DRB bitmaps carry no positions.  Any
+            # additive measure works: documents are fully materialized before
+            # scoring, so DR's monotonicity restriction does not apply.
+            if strategy == "drb":
+                raise ValueError(f"mode={mode!r} runs on the bare WTBC; use "
+                                 "strategy='dr' or 'auto'")
+            if budget is not None:
+                raise ValueError("budget (any-time max_pops) applies to the "
+                                 "and/or DR strategy only")
+            return "dr"
         if strategy == "auto":
             strategy = "dr" if measure.dr_compatible else "drb"
         if strategy == "dr":
@@ -267,6 +283,8 @@ class SearchEngine:
                 ex = executors.make_sharded(
                     key, mesh=self._mesh, shard_axes=self._shard_axes,
                     heap_cap=self._heap_cap, note=note)
+            elif key.mode in POSITIONAL_MODES:
+                ex = executors.make_single_positional(key, note=note)
             elif key.strategy == "dr":
                 ex = executors.make_single_dr(key, heap_cap=self._heap_cap,
                                               note=note)
@@ -277,25 +295,46 @@ class SearchEngine:
 
     def search(self, queries, *, k: int | None = None, mode: str = "and",
                strategy: str = "auto", measure="tfidf",
-               budget: int | None = None) -> SearchResults:
+               budget: int | None = None,
+               window: int | None = None) -> SearchResults:
         """Ranked top-k retrieval.
 
         queries:  (B, Q) / (Q,) array of word ids, or ragged lists of ids.
         k:        results per query (default: ``config.default_k``).
-        mode:     "and" (conjunctive) or "or" (bag-of-words).
+        mode:     "and" (conjunctive), "or" (bag-of-words), "phrase" (exact
+                  consecutive in-order match), or "near" (all words within a
+                  ``window``-token span).  phrase/near results additionally
+                  carry match positions — see ``SearchResults.matches``.
         strategy: "dr" (no extra space), "drb" (tf bitmaps), or "auto" —
                   DR when the measure allows it, else DRB (e.g. BM25).
+                  phrase/near always run on the bare WTBC ("dr").
         measure:  "tfidf", "bm25", or a scoring object.
         budget:   DR any-time pop budget (per shard when sharded); exact
-                  search when None.  DR only.
+                  search when None.  DR and/or only.
+        window:   proximity width in tokens, mode="near" only (default:
+                  ``config.default_window``).  Traced — varying it reuses
+                  the compiled executor.
         """
         k = self.config.default_k if k is None else int(k)
         if k <= 0:
             raise ValueError(f"k must be positive, got {k}")
         if mode not in MODES:
             raise ValueError(f"unknown mode {mode!r}; expected one of {MODES}")
+        if mode == "near":
+            window = self.config.default_window if window is None else int(window)
+            if window < 1:
+                raise ValueError(f"window must be >= 1, got {window}")
+        elif window is not None:
+            raise ValueError(f"window applies to mode='near' only "
+                             f"(got mode={mode!r})")
         m = self._resolve_measure(measure)
-        strat = self._resolve_strategy(strategy, m, budget)
+        strat = self._resolve_strategy(strategy, m, budget, mode)
+        if mode in POSITIONAL_MODES:
+            if self.backend == "sharded":
+                raise ValueError(f"mode={mode!r} is not yet supported on the "
+                                 "sharded backend; build a single-host engine")
+            # positional top-k is a dense lax.top_k over the doc table
+            k = min(k, self.n_docs)
         ranks, mask = self._encode_queries(queries)
         df_cap = (self._df_cap(ranks, mask)
                   if strat == "drb" and mode == "or" else None)
@@ -303,7 +342,12 @@ class SearchEngine:
                                     tuple(ranks.shape), budget, df_cap)
         ex = self._executor(key)
         words, wmask = jnp.asarray(ranks), jnp.asarray(mask)
-        if self.backend == "sharded":
+        match_pos = match_len = None
+        if mode in POSITIONAL_MODES:
+            res = ex(self.idx, words, wmask, self._idf_table(m),
+                     jnp.int32(window or 0), self._avg_doc_len())
+            match_pos, match_len = res.match_pos, res.match_len
+        elif self.backend == "sharded":
             res = ex(self._sharded, words, wmask, self._idf_table(m))
         elif strat == "dr":
             res = ex(self.idx, words, wmask, self._idf_table(m))
@@ -312,7 +356,8 @@ class SearchEngine:
                      self._avg_doc_len())
         return SearchResults(docs=res.docs, scores=res.scores,
                              n_found=res.n_found, work=res.iters, k=k,
-                             mode=mode, strategy=strat, measure=m.name)
+                             mode=mode, strategy=strat, measure=m.name,
+                             match_pos=match_pos, match_len=match_len)
 
     # -- post-processing -----------------------------------------------------
 
@@ -349,6 +394,29 @@ class SearchEngine:
                 )(offs))[:n_take]
                 row.append(np.asarray(self.model.word_of_rank)[ranks])
             out.append(row)
+        return out
+
+    def word_positions(self, doc: int, word_ids,
+                       cap: int = 32) -> dict[int, np.ndarray]:
+        """Doc-relative occurrence positions of each word id inside document
+        ``doc`` (the first ``cap`` per word), extracted straight from the
+        compressed index — the hit-highlighting companion to
+        :meth:`snippets` (e.g. to mark every query word around a positional
+        match)."""
+        doc = int(doc)
+        if not 0 <= doc < self.n_docs:
+            raise ValueError(f"doc id {doc} outside [0, {self.n_docs})")
+        idx, local = self._local_index(doc)
+        V = self.model.vocab_size
+        out = {}
+        for w in word_ids:
+            w = int(w)
+            if not 1 <= w < V:
+                raise ValueError(f"word id {w} outside [1, {V})")
+            r = jnp.int32(self.model.rank_of_word[w])
+            pos = np.asarray(positional.doc_positions(
+                idx, r, jnp.int32(local), cap=cap))
+            out[w] = pos[pos >= 0]
         return out
 
     # -- introspection -------------------------------------------------------

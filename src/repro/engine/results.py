@@ -26,6 +26,11 @@ class SearchResults:
              df cap the gather ran with.
     k / mode / strategy / measure: the resolved query parameters (``strategy``
              is post-"auto" routing, never "auto" itself).
+    match_pos / match_len: positional payloads, present for the "phrase" /
+             "near" modes only (None otherwise).  ``match_pos`` is the
+             (B, k) doc-relative token offset of the first phrase match /
+             of the minimal proximity window; ``match_len`` its width in
+             tokens; both -1 padded past ``n_found``.
     """
     docs: jnp.ndarray
     scores: jnp.ndarray
@@ -35,11 +40,17 @@ class SearchResults:
     mode: str
     strategy: str
     measure: str
+    match_pos: jnp.ndarray | None = None
+    match_len: jnp.ndarray | None = None
 
     def __post_init__(self):
         if self.docs.ndim != 2 or self.scores.shape != self.docs.shape:
             raise ValueError(f"expected batched (B, k) results, got docs "
                              f"{self.docs.shape} / scores {self.scores.shape}")
+        for a in (self.match_pos, self.match_len):
+            if a is not None and a.shape != self.docs.shape:
+                raise ValueError(f"match payload shape {a.shape} != docs "
+                                 f"shape {self.docs.shape}")
 
     def __len__(self) -> int:
         """Number of queries in the batch."""
@@ -51,6 +62,18 @@ class SearchResults:
         docs = np.asarray(self.docs[b])[:n]
         scores = np.asarray(self.scores[b])[:n]
         return [(int(d), float(s)) for d, s in zip(docs, scores)]
+
+    def matches(self, b: int = 0) -> list[tuple[int, float, int, int]]:
+        """Found ``(doc_id, score, match_pos, match_len)`` tuples of query
+        ``b``, best first — positional ("phrase" / "near") results only."""
+        if self.match_pos is None or self.match_len is None:
+            raise ValueError(f"mode={self.mode!r} results carry no match "
+                             "positions; use .hits() (positions exist for "
+                             "the 'phrase' and 'near' modes only)")
+        n = int(self.n_found[b])
+        return [(int(d), float(s), int(p), int(l)) for d, s, p, l in zip(
+            np.asarray(self.docs[b])[:n], np.asarray(self.scores[b])[:n],
+            np.asarray(self.match_pos[b])[:n], np.asarray(self.match_len[b])[:n])]
 
     def doc_ids(self) -> np.ndarray:
         """(B, k) numpy view of the document ids (-1 padded)."""

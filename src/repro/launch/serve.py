@@ -2,12 +2,13 @@
 
 Builds a :class:`repro.engine.SearchEngine` over a synthetic corpus (single
 index or document-sharded over a local mesh) and serves batched ranked
-queries — DR / DRB / auto routing, AND / OR, tf-idf / BM25 — with latency
-stats.  All query glue (rank mapping, masking, heap/df caps, jit executor
-caching) lives behind ``engine.search``:
+queries — DR / DRB / auto routing, AND / OR / phrase / near, tf-idf / BM25 —
+with latency stats.  All query glue (rank mapping, masking, heap/df caps, jit
+executor caching) lives behind ``engine.search``:
 
   PYTHONPATH=src python -m repro.launch.serve --docs 2000 --queries 100 \
       --strategy dr --mode or --k 10
+  PYTHONPATH=src python -m repro.launch.serve --mode near --window 6
 """
 from __future__ import annotations
 
@@ -30,10 +31,13 @@ def main():
     ap.add_argument("--words", type=int, default=3)
     ap.add_argument("--k", type=int, default=10)
     ap.add_argument("--strategy", default="auto", choices=("dr", "drb", "auto"))
-    ap.add_argument("--mode", default="or", choices=("and", "or"))
+    ap.add_argument("--mode", default="or",
+                    choices=("and", "or", "phrase", "near"))
     ap.add_argument("--measure", default="tfidf", choices=("tfidf", "bm25"))
     ap.add_argument("--budget", type=int, default=None,
                     help="DR any-time pop budget (straggler mitigation)")
+    ap.add_argument("--window", type=int, default=None,
+                    help="proximity width in tokens (mode=near only)")
     ap.add_argument("--shards", type=int, default=0,
                     help="0 = single index; N = document-sharded over a local mesh")
     ap.add_argument("--seed", type=int, default=0)
@@ -46,13 +50,19 @@ def main():
     else:
         engine = SearchEngine.build(cp)
 
-    df = cp.doc_freqs()
-    bands = corpus.fdoc_bands(cp.n_docs)
-    queries = corpus.sample_queries(df, bands["ii"], args.queries, args.words,
-                                    seed=args.seed)
+    if args.mode in ("phrase", "near"):
+        # n-grams lifted from the documents: positional queries that exercise
+        # the matching path, not the empty one
+        queries = corpus.sample_ngram_queries(cp.doc_tokens, args.queries,
+                                              args.words, seed=args.seed)
+    else:
+        df = cp.doc_freqs()
+        bands = corpus.fdoc_bands(cp.n_docs)
+        queries = corpus.sample_queries(df, bands["ii"], args.queries,
+                                        args.words, seed=args.seed)
     run = lambda: engine.search(queries, k=args.k, mode=args.mode,
                                 strategy=args.strategy, measure=args.measure,
-                                budget=args.budget)
+                                budget=args.budget, window=args.window)
 
     print("compiling ...", flush=True)
     t0 = time.time()
@@ -69,6 +79,8 @@ def main():
     print(f"compile {compile_s:.1f}s | {args.queries} queries in {serve_s*1e3:.1f}ms "
           f"({serve_s/args.queries*1e3:.2f} ms/query) | routed to {res.strategy}")
     print("first query top-k docs:", np.asarray(res.docs[0])[:args.k].tolist())
+    if res.match_pos is not None:
+        print("first query matches (doc, score, pos, len):", res.matches(0))
 
 
 if __name__ == "__main__":

@@ -86,6 +86,41 @@ def sample_queries(df: np.ndarray, band: tuple[int, int], n_queries: int,
                      for _ in range(n_queries)])
 
 
+def sample_ngram_queries(doc_tokens, n_queries: int, q_len: int,
+                         seed: int = 0, *, df: np.ndarray | None = None,
+                         df_cap: int | None = None, random_prob: float = 0.0,
+                         vocab_size: int | None = None) -> np.ndarray:
+    """(n_queries, q_len) word-id batches: contiguous n-grams lifted from
+    random documents — positional (phrase/near) queries that actually have
+    occurrences to rank (independent random words almost never co-occur
+    adjacently, which would exercise only the empty-result path).
+
+    df/df_cap:   best-effort rejection (up to 50 draws) of n-grams containing
+                 a word with document frequency above ``df_cap`` — the near
+                 sweep is O(sum of the query words' occurrences), so Zipf-head
+                 stopword grams benchmark the worst case, not the typical one.
+    random_prob: probability of replacing an n-gram with uniform random ids
+                 in [1, vocab_size) (differential tests want no-match cases).
+    """
+    rng = np.random.default_rng(seed)
+    pool = [d for d in doc_tokens if len(d) >= q_len]
+    if not pool:
+        raise ValueError(f"no documents with >= {q_len} tokens to lift "
+                         f"{q_len}-gram queries from")
+    out = np.empty((n_queries, q_len), dtype=np.int64)
+    for i in range(n_queries):
+        if random_prob and rng.random() < random_prob:
+            out[i] = rng.integers(1, vocab_size, size=q_len)
+            continue
+        for _ in range(50):
+            d = pool[int(rng.integers(len(pool)))]
+            j = int(rng.integers(0, len(d) - q_len + 1))
+            out[i] = d[j:j + q_len]
+            if df is None or df_cap is None or int(df[out[i]].max()) <= df_cap:
+                break
+    return out
+
+
 def zipf_real_queries(df: np.ndarray, n_queries: int, words_per_query: int,
                       seed: int = 0) -> np.ndarray:
     """'Real-log'-like queries: words drawn with probability ~ df (frequent

@@ -1,15 +1,38 @@
 """Shared fixtures.  NOTE: no XLA_FLAGS here — tests must see 1 CPU device
-(the 512-device override belongs exclusively to launch/dryrun.py)."""
+(the 512-device override belongs exclusively to launch/dryrun.py).
+
+Corpus / index / engine fixtures are all session-scoped: WTBC builds and the
+first jit compile dominate test wall-clock, so every module shares one build
+instead of paying it per module."""
 import numpy as np
 import pytest
 
 from repro.core import drb, scoring, wtbc
+from repro.engine import EngineConfig, SearchEngine
 from repro.text import corpus
 
 
 @pytest.fixture(scope="session")
 def small_corpus():
     return corpus.make_corpus(n_docs=120, mean_doc_len=60, vocab_size=500, seed=3)
+
+
+@pytest.fixture(scope="session")
+def engine_corpus():
+    return corpus.make_corpus(n_docs=90, mean_doc_len=50, vocab_size=400, seed=9)
+
+
+@pytest.fixture(scope="session")
+def engine(engine_corpus):
+    return SearchEngine.build(engine_corpus, EngineConfig(block=512))
+
+
+@pytest.fixture(scope="session")
+def query_batch(engine_corpus):
+    df = engine_corpus.doc_freqs()
+    pool = np.flatnonzero((df >= 2) & (df <= 40))
+    rng = np.random.default_rng(4)
+    return np.stack([rng.choice(pool, 3, replace=False) for _ in range(3)])
 
 
 @pytest.fixture(scope="session")

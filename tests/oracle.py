@@ -1,0 +1,195 @@
+"""Brute-force NumPy retrieval oracle — the differential-test ground truth.
+
+Everything here rescans the *raw* token lists (never the WTBC, never JAX), so
+any agreement with the engine is evidence about the compressed index and the
+jitted query kernels, not a shared bug.  The oracle mirrors the engine's
+*semantics* exactly — per-slot tf (duplicate query words count twice), the
+DRB stopword rule (words with idf < eps carry no bitmap and drop out of DRB
+conjunctions and scoring), DR's score>0 disjunctive eligibility, phrase
+adjacency, minimal proximity cover windows and their leftmost tie-breaks —
+while computing everything the dumb O(N · doc_len) way.
+
+``search_oracle`` is the one entry point: it returns the *full* eligible
+ranking as ``{doc: {"score", "pos", "len"}}``; differential tests query the
+engine with ``k = n_docs`` and compare per-document, which sidesteps
+tie-order entirely.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+INT32_MAX = 2**31 - 1
+
+
+# ---------------------------------------------------------------------------
+# collection statistics
+# ---------------------------------------------------------------------------
+
+def doc_freqs(doc_tokens, vocab_size: int) -> np.ndarray:
+    df = np.zeros(vocab_size, dtype=np.int64)
+    for d in doc_tokens:
+        df[np.unique(np.asarray(d))] += 1
+    return df
+
+
+def idf_table(doc_tokens, vocab_size: int, measure: str) -> np.ndarray:
+    """Per-word idf, mirroring scoring.TfIdf / scoring.BM25."""
+    df = doc_freqs(doc_tokens, vocab_size).astype(np.float64)
+    n = float(len(doc_tokens))
+    if measure == "tfidf":
+        return np.log(n / np.maximum(df, 1.0))
+    if measure == "bm25":
+        return np.log(1.0 + (n - df + 0.5) / (df + 0.5))
+    raise ValueError(measure)
+
+
+def has_bitmap(doc_tokens, vocab_size: int, eps: float = 1e-6) -> np.ndarray:
+    """Which words get a DRB tf bitmap (mirrors drb.build_aux)."""
+    df = doc_freqs(doc_tokens, vocab_size).astype(np.float64)
+    n = max(len(doc_tokens), 1)
+    idf = np.log(n / np.maximum(df, 1.0))
+    return (idf >= eps) & (df > 0)
+
+
+def tf_matrix(doc_tokens, word_ids) -> np.ndarray:
+    """(N, Q) per-slot term frequencies (duplicate slots repeat)."""
+    word_ids = np.asarray(word_ids)
+    out = np.zeros((len(doc_tokens), len(word_ids)), dtype=np.int64)
+    for d, doc in enumerate(doc_tokens):
+        doc = np.asarray(doc)
+        for q, w in enumerate(word_ids):
+            out[d, q] = int(np.sum(doc == w))
+    return out
+
+
+def score_docs(tf: np.ndarray, idf_w: np.ndarray, doc_len: np.ndarray,
+               measure: str, avg_dl: float | None = None,
+               k1: float = 1.2, b: float = 0.75) -> np.ndarray:
+    """(N,) scores from per-slot tf — mirrors scoring.TfIdf/BM25.score.
+    ``avg_dl`` defaults to the mean of ``doc_len`` (pass the collection
+    average when scoring a slice)."""
+    tf = tf.astype(np.float64)
+    if measure == "tfidf":
+        return tf @ idf_w
+    if measure == "bm25":
+        if avg_dl is None:
+            avg_dl = float(doc_len.sum()) / len(doc_len)
+        norm = 1.0 - b + b * (doc_len.astype(np.float64) / avg_dl)
+        part = tf * (k1 + 1.0) / (tf + k1 * norm[:, None])
+        return part @ idf_w
+    raise ValueError(measure)
+
+
+# ---------------------------------------------------------------------------
+# positional primitives
+# ---------------------------------------------------------------------------
+
+def phrase_occurrences(doc, phrase) -> list[int]:
+    """Start offsets of every exact consecutive in-order match."""
+    doc = list(np.asarray(doc))
+    phrase = list(np.asarray(phrase))
+    if not phrase or len(phrase) > len(doc):
+        return []
+    return [i for i in range(len(doc) - len(phrase) + 1)
+            if doc[i:i + len(phrase)] == phrase]
+
+
+def min_cover_window(doc, word_ids) -> tuple[int, int]:
+    """(width, start) of the smallest window of ``doc`` containing one
+    occurrence of every word in ``word_ids`` (a multiset — duplicates are
+    satisfied by one occurrence); (INT32_MAX, -1) when none exists.  Ties on
+    width resolve to the smallest start."""
+    doc = np.asarray(doc)
+    occ = {int(w): np.flatnonzero(doc == w) for w in set(int(w) for w in word_ids)}
+    if any(len(v) == 0 for v in occ.values()):
+        return INT32_MAX, -1
+    best = (INT32_MAX, -1)
+    for p in range(len(doc)):
+        lasts = []
+        for pos in occ.values():
+            prior = pos[pos <= p]
+            if len(prior) == 0:
+                lasts = None
+                break
+            lasts.append(int(prior[-1]))
+        if lasts is None:
+            continue
+        start = min(lasts)
+        width = p - start + 1
+        if width < best[0]:
+            best = (width, start)
+    return best
+
+
+# ---------------------------------------------------------------------------
+# the full ranking oracle
+# ---------------------------------------------------------------------------
+
+def search_oracle(doc_tokens, query, *, mode: str, measure: str = "tfidf",
+                  strategy: str = "dr", window: int | None = None,
+                  vocab_size: int | None = None,
+                  eps: float = 1e-6) -> dict[int, dict]:
+    """Full eligible ranking for one query: ``{doc: {"score", "pos", "len"}}``.
+
+    mode:     "and" | "or" | "phrase" | "near".
+    strategy: "dr" | "drb" — matters for and/or only (DRB excludes bitmap-less
+              stopwords from conjunction and scoring; DR does not).
+    ``pos``/``len`` are -1 for the non-positional modes.
+    """
+    query = [int(w) for w in query]
+    if vocab_size is None:
+        vocab_size = max((int(np.max(d)) for d in doc_tokens if len(d)),
+                         default=0) + 1
+        vocab_size = max(vocab_size, max(query, default=0) + 1)
+    doc_len = np.array([len(d) for d in doc_tokens], dtype=np.int64)
+    idf = idf_table(doc_tokens, vocab_size, measure)
+    tf = tf_matrix(doc_tokens, query)                      # (N, Q)
+
+    if mode in ("phrase", "near"):
+        valid = np.ones(len(query), dtype=bool)
+    elif strategy == "drb":
+        valid = has_bitmap(doc_tokens, vocab_size, eps)[query]
+    elif strategy == "dr":
+        valid = np.ones(len(query), dtype=bool)
+    else:
+        raise ValueError(strategy)
+
+    idf_w = np.where(valid, idf[query], 0.0)
+    avg_dl = float(doc_len.sum()) / len(doc_len)
+    scores = score_docs(tf, idf_w, doc_len, measure, avg_dl)
+
+    out: dict[int, dict] = {}
+    df_q = doc_freqs(doc_tokens, vocab_size)[query]
+    for d in range(len(doc_tokens)):
+        pos = length = -1
+        if mode == "and":
+            if strategy == "drb":
+                # absent (df=0) masked word empties the conjunction; bitmap-
+                # less stopwords drop out of it (drb.topk_drb_and contract)
+                eligible = (not np.any(df_q == 0) and np.any(valid)
+                            and bool(np.all(tf[d][valid] > 0)))
+            else:
+                eligible = bool(np.all(tf[d] > 0))
+        elif mode == "or":
+            if strategy == "drb":
+                eligible = bool(np.any(tf[d][valid] > 0))
+            else:
+                eligible = scores[d] > 0.0                 # ranked.seg_valid
+        elif mode == "phrase":
+            occ = phrase_occurrences(doc_tokens[d], query)
+            eligible = len(occ) > 0
+            if eligible:
+                pos, length = occ[0], len(query)
+                scores[d] = score_docs(
+                    np.full((1, len(query)), len(occ), dtype=np.int64),
+                    idf_w, doc_len[d:d + 1], measure, avg_dl)[0]
+        elif mode == "near":
+            width, start = min_cover_window(doc_tokens[d], query)
+            eligible = width <= int(window)
+            if eligible:
+                pos, length = start, width
+        else:
+            raise ValueError(mode)
+        if eligible:
+            out[d] = {"score": float(scores[d]), "pos": pos, "len": length}
+    return out

@@ -13,25 +13,10 @@ import pytest
 
 from repro.core import ranked, scoring
 from repro.engine import EngineConfig, SearchEngine
-from repro.text import corpus
 
 
-@pytest.fixture(scope="module")
-def engine_corpus():
-    return corpus.make_corpus(n_docs=90, mean_doc_len=50, vocab_size=400, seed=9)
-
-
-@pytest.fixture(scope="module")
-def engine(engine_corpus):
-    return SearchEngine.build(engine_corpus, EngineConfig(block=512))
-
-
-@pytest.fixture(scope="module")
-def query_batch(engine_corpus):
-    df = engine_corpus.doc_freqs()
-    pool = np.flatnonzero((df >= 2) & (df <= 40))
-    rng = np.random.default_rng(4)
-    return np.stack([rng.choice(pool, 3, replace=False) for _ in range(3)])
+# engine_corpus / engine / query_batch fixtures are session-scoped in
+# conftest.py — shared with the differential suite.
 
 
 def _bruteforce(engine, measure, word_ids, k, conjunctive):
@@ -143,6 +128,61 @@ def test_executor_cache_no_retrace(engine_corpus, query_batch):
     engine.search(query_batch[:1], k=5, mode="or", strategy="dr")
     assert engine.stats["executors"] == 3
     assert sum(engine.stats["traces"].values()) == 3
+
+
+def test_executor_cache_retrace_regression(engine_corpus, query_batch):
+    """Same (strategy, mode, measure, k, batch_shape, budget) traffic must
+    hit the compiled executor — one trace per distinct key, ever."""
+    engine = SearchEngine.build(engine_corpus, EngineConfig(block=512))
+    for _ in range(3):
+        engine.search(query_batch, k=5, mode="and", strategy="dr")
+        engine.search(query_batch, k=5, mode="and", strategy="drb")
+        engine.search(query_batch, k=5, mode="or", strategy="drb",
+                      measure="bm25")
+        engine.search(query_batch, k=5, mode="or", strategy="dr", budget=16)
+    assert engine.stats["executors"] == 4
+    assert all(n == 1 for n in engine.stats["traces"].values())
+    # distinct budget -> distinct key, one more trace
+    engine.search(query_batch, k=5, mode="or", strategy="dr", budget=32)
+    assert engine.stats["executors"] == 5
+    assert all(n == 1 for n in engine.stats["traces"].values())
+
+
+def test_positional_modes_distinct_executor_keys(engine_corpus, query_batch):
+    """phrase vs near get distinct executors; the proximity window is traced
+    (changing it must NOT retrace or add executors)."""
+    engine = SearchEngine.build(engine_corpus, EngineConfig(block=512))
+    engine.search(query_batch, k=5, mode="phrase")
+    assert engine.stats["executors"] == 1
+    engine.search(query_batch, k=5, mode="near", window=4)
+    assert engine.stats["executors"] == 2
+    keys = list(engine.stats["traces"])
+    assert {k.mode for k in keys} == {"phrase", "near"}
+    # repeat traffic + a different window: cache hits only
+    engine.search(query_batch, k=5, mode="phrase")
+    engine.search(query_batch, k=5, mode="near", window=9)
+    assert engine.stats["executors"] == 2
+    assert all(n == 1 for n in engine.stats["traces"].values())
+    # positional and conjunctive "dr" traffic never share an executor
+    engine.search(query_batch, k=5, mode="and", strategy="dr")
+    assert engine.stats["executors"] == 3
+
+
+def test_positional_validation(engine, query_batch):
+    with pytest.raises(ValueError, match="window"):
+        engine.search(query_batch, k=5, mode="and", window=4)
+    with pytest.raises(ValueError, match="window"):
+        engine.search(query_batch, k=5, mode="phrase", window=4)
+    with pytest.raises(ValueError, match="window must be"):
+        engine.search(query_batch, k=5, mode="near", window=0)
+    with pytest.raises(ValueError, match="bare WTBC"):
+        engine.search(query_batch, k=5, mode="phrase", strategy="drb")
+    with pytest.raises(ValueError, match="budget"):
+        engine.search(query_batch, k=5, mode="near", budget=10)
+    # non-positional results carry no match payloads
+    res = engine.search(query_batch, k=5, mode="or")
+    with pytest.raises(ValueError, match="match positions"):
+        res.matches(0)
 
 
 def test_round_trip_build_search_snippets():

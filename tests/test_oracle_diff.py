@@ -1,0 +1,238 @@
+"""Randomized differential tests: every query path vs the NumPy oracle.
+
+The engine answers from the compressed WTBC through jitted kernels; the
+oracle (tests/oracle.py) rescans the raw token lists.  Queries run with
+``k = n_docs`` so the *full* eligible ranking comes back and comparisons are
+per-document — no dependence on tie order.
+
+Two populations:
+* deterministic seeded sweeps (always run, no extra deps) — ≥ 200 randomized
+  positional cases plus DR/DRB and/or differentials across three corpora;
+* hypothesis property tests (via tests/_hypothesis_shim.py — they skip
+  cleanly when hypothesis is not installed) over tiny adversarial corpora,
+  hitting the core kernels directly so jit caches across examples.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import oracle
+from _hypothesis_shim import given, settings, st
+
+from repro.core import positional, ranked, scoring, wtbc
+from repro.engine import EngineConfig, SearchEngine
+from repro.text import corpus
+
+RTOL, ATOL = 2e-5, 1e-4
+
+
+# ---------------------------------------------------------------------------
+# corpus / query generation
+# ---------------------------------------------------------------------------
+
+def make_docs(rng, n_docs, max_len, vocab, min_len=3):
+    return [rng.integers(1, vocab, size=int(rng.integers(min_len, max_len + 1))
+                         ).astype(np.int64) for _ in range(n_docs)]
+
+
+def sample_queries(rng, docs, vocab, n_queries, q_len, random_prob=0.4):
+    """Query batch mixing document n-grams (guaranteed phrase/window hits)
+    with uniform random word combinations (no-match and partial cases)."""
+    return corpus.sample_ngram_queries(
+        docs, n_queries, q_len, seed=int(rng.integers(2**31)),
+        random_prob=random_prob, vocab_size=vocab)
+
+
+# ---------------------------------------------------------------------------
+# comparison helpers
+# ---------------------------------------------------------------------------
+
+def assert_positional_matches_oracle(engine, docs, queries, mode, measure,
+                                     window=None):
+    res = engine.search(queries, k=len(docs), mode=mode, measure=measure,
+                        window=window)
+    for b in range(len(queries)):
+        exp = oracle.search_oracle(docs, queries[b], mode=mode,
+                                   measure=measure, window=window,
+                                   vocab_size=engine.model.vocab_size)
+        got = {d: (s, p, l) for d, s, p, l in res.matches(b)}
+        assert set(got) == set(exp), (mode, measure, queries[b].tolist())
+        for d, (s, p, l) in got.items():
+            assert p == exp[d]["pos"], (mode, d, queries[b].tolist())
+            assert l == exp[d]["len"], (mode, d, queries[b].tolist())
+            np.testing.assert_allclose(s, exp[d]["score"], rtol=RTOL,
+                                       atol=ATOL)
+    return len(queries)
+
+
+def assert_ranked_matches_oracle(engine, docs, queries, mode, strategy,
+                                 measure):
+    res = engine.search(queries, k=len(docs), mode=mode, strategy=strategy,
+                        measure=measure)
+    for b in range(len(queries)):
+        exp = oracle.search_oracle(docs, queries[b], mode=mode,
+                                   measure=measure, strategy=strategy,
+                                   vocab_size=engine.model.vocab_size)
+        got = dict(res.hits(b))
+        assert set(got) == set(exp), (mode, strategy, measure,
+                                      queries[b].tolist())
+        for d, s in got.items():
+            np.testing.assert_allclose(s, exp[d]["score"], rtol=RTOL,
+                                       atol=ATOL)
+    return len(queries)
+
+
+# ---------------------------------------------------------------------------
+# deterministic seeded sweeps (the ≥ 200-case acceptance gate)
+# ---------------------------------------------------------------------------
+
+# (n_docs, max_doc_len, vocab) — small vocabularies force plenty of phrase
+# hits, repeated words, and tight proximity windows
+CORPORA = [(12, 24, 30), (30, 16, 60), (20, 40, 25)]
+
+
+@pytest.fixture(scope="module")
+def diff_engines():
+    out = []
+    for seed, (n_docs, max_len, vocab) in enumerate(CORPORA):
+        rng = np.random.default_rng(100 + seed)
+        docs = make_docs(rng, n_docs, max_len, vocab)
+        engine = SearchEngine.build(docs, EngineConfig(block=128),
+                                    vocab_size=vocab)
+        out.append((rng, docs, vocab, engine))
+    return out
+
+
+def test_positional_differential_200_cases(diff_engines):
+    """phrase/near (docs, scores, match positions) == oracle on ≥ 200 cases."""
+    cases = 0
+    for ci, (rng, docs, vocab, engine) in enumerate(diff_engines):
+        B = 20
+        q2 = sample_queries(rng, docs, vocab, B, 2)
+        q3 = sample_queries(rng, docs, vocab, B, 3)
+        cases += assert_positional_matches_oracle(
+            engine, docs, q2, "phrase", "tfidf")
+        cases += assert_positional_matches_oracle(
+            engine, docs, q2, "near", "tfidf", window=3)
+        # same executor, different window — dynamic, no retrace
+        cases += assert_positional_matches_oracle(
+            engine, docs, q2, "near", "tfidf", window=8)
+        if ci < 2:   # full matrix on the first two corpora
+            cases += assert_positional_matches_oracle(
+                engine, docs, q3, "phrase", "tfidf")
+            cases += assert_positional_matches_oracle(
+                engine, docs, q3, "near", "bm25", window=5)
+    assert cases >= 200, cases
+
+
+def test_ranked_differential_dr_drb(diff_engines):
+    """Existing DR/DRB and/or paths against the same oracle."""
+    cases = 0
+    for rng, docs, vocab, engine in diff_engines[:2]:
+        qs = sample_queries(rng, docs, vocab, 8, 2, random_prob=0.6)
+        for mode in ("and", "or"):
+            for strategy in ("dr", "drb"):
+                cases += assert_ranked_matches_oracle(
+                    engine, docs, qs, mode, strategy, "tfidf")
+            cases += assert_ranked_matches_oracle(
+                engine, docs, qs, mode, "drb", "bm25")
+    assert cases >= 90, cases
+
+
+def test_phrase_with_duplicate_words():
+    """Repeated-word phrases ("w w") exercise the decode adjacency check."""
+    # force documents that contain runs
+    run_docs = [np.array([5, 5, 7, 5, 5, 5, 2], dtype=np.int64),
+                np.array([5, 7, 5, 7, 5], dtype=np.int64),
+                np.array([7, 7, 2, 2, 2], dtype=np.int64)]
+    eng = SearchEngine.build(run_docs, EngineConfig(block=128), vocab_size=10)
+    for q in ([5, 5], [5, 5, 5], [7, 5], [2, 2]):
+        exp = oracle.search_oracle(run_docs, q, mode="phrase",
+                                   measure="tfidf", vocab_size=10)
+        res = eng.search([q], k=3, mode="phrase")
+        got = {d: (p, l) for d, _, p, l in res.matches(0)}
+        assert got == {d: (v["pos"], v["len"]) for d, v in exp.items()}, q
+
+
+# ---------------------------------------------------------------------------
+# hypothesis property tests (skip without the dev extra)
+# ---------------------------------------------------------------------------
+
+N_DOCS_H, VOCAB_H, BLOCK_H = 6, 12, 128
+
+docs_strategy = st.lists(
+    st.lists(st.integers(min_value=1, max_value=VOCAB_H - 1),
+             min_size=3, max_size=10),
+    min_size=N_DOCS_H, max_size=N_DOCS_H)
+query2 = st.lists(st.integers(min_value=1, max_value=VOCAB_H - 1),
+                  min_size=2, max_size=2)
+query3 = st.lists(st.integers(min_value=1, max_value=VOCAB_H - 1),
+                  min_size=3, max_size=3)
+
+
+def _index(doc_lists):
+    docs = [np.asarray(d, dtype=np.int64) for d in doc_lists]
+    idx, model = wtbc.build_index(docs, VOCAB_H, block=BLOCK_H)
+    return docs, idx, model
+
+
+@settings(max_examples=25, deadline=None)
+@given(doc_lists=docs_strategy, q=query2)
+def test_hyp_phrase_matches_oracle(doc_lists, q):
+    docs, idx, model = _index(doc_lists)
+    m = scoring.TfIdf()
+    words = jnp.asarray(model.rank_of_word[np.asarray(q)], jnp.int32)
+    res = positional.topk_positional(idx, words, jnp.ones(2, bool), m.idf(idx),
+                                     k=N_DOCS_H, phrase=True, measure=m)
+    exp = oracle.search_oracle(docs, q, mode="phrase", measure="tfidf",
+                               vocab_size=VOCAB_H)
+    n = int(res.n_found)
+    got = {int(d): (float(s), int(p), int(l)) for d, s, p, l in zip(
+        np.asarray(res.docs)[:n], np.asarray(res.scores)[:n],
+        np.asarray(res.match_pos)[:n], np.asarray(res.match_len)[:n])}
+    assert set(got) == set(exp)
+    for d, (s, p, l) in got.items():
+        assert (p, l) == (exp[d]["pos"], exp[d]["len"])
+        np.testing.assert_allclose(s, exp[d]["score"], rtol=RTOL, atol=ATOL)
+
+
+@settings(max_examples=25, deadline=None)
+@given(doc_lists=docs_strategy, q=query3,
+       window=st.integers(min_value=1, max_value=8))
+def test_hyp_near_matches_oracle(doc_lists, q, window):
+    docs, idx, model = _index(doc_lists)
+    m = scoring.TfIdf()
+    words = jnp.asarray(model.rank_of_word[np.asarray(q)], jnp.int32)
+    res = positional.topk_positional(idx, words, jnp.ones(3, bool), m.idf(idx),
+                                     k=N_DOCS_H, phrase=False, measure=m,
+                                     window=jnp.int32(window))
+    exp = oracle.search_oracle(docs, q, mode="near", measure="tfidf",
+                               window=window, vocab_size=VOCAB_H)
+    n = int(res.n_found)
+    got = {int(d): (float(s), int(p), int(l)) for d, s, p, l in zip(
+        np.asarray(res.docs)[:n], np.asarray(res.scores)[:n],
+        np.asarray(res.match_pos)[:n], np.asarray(res.match_len)[:n])}
+    assert set(got) == set(exp)
+    for d, (s, p, l) in got.items():
+        assert (p, l) == (exp[d]["pos"], exp[d]["len"])
+        np.testing.assert_allclose(s, exp[d]["score"], rtol=RTOL, atol=ATOL)
+
+
+@settings(max_examples=25, deadline=None)
+@given(doc_lists=docs_strategy, q=query2, conjunctive=st.booleans())
+def test_hyp_dr_matches_oracle(doc_lists, q, conjunctive):
+    docs, idx, model = _index(doc_lists)
+    m = scoring.TfIdf()
+    words = jnp.asarray(model.rank_of_word[np.asarray(q)], jnp.int32)
+    res = ranked.topk_dr(idx, words, jnp.ones(2, bool), m.idf(idx),
+                         k=N_DOCS_H, conjunctive=conjunctive,
+                         heap_cap=2 * N_DOCS_H + 4)
+    exp = oracle.search_oracle(docs, q, mode="and" if conjunctive else "or",
+                               measure="tfidf", strategy="dr",
+                               vocab_size=VOCAB_H)
+    n = int(res.n_found)
+    got = {int(d): float(s) for d, s in zip(np.asarray(res.docs)[:n],
+                                            np.asarray(res.scores)[:n])}
+    assert set(got) == set(exp)
+    for d, s in got.items():
+        np.testing.assert_allclose(s, exp[d]["score"], rtol=RTOL, atol=ATOL)

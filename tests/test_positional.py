@@ -1,0 +1,135 @@
+"""repro.core.positional — unit tests on hand-checked corpora.
+
+The differential suite (test_oracle_diff.py) pins these kernels against the
+NumPy oracle on randomized corpora; here the expected numbers are written out
+by hand so a failure localizes immediately.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import positional, scoring, wtbc
+from repro.engine import EngineConfig, SearchEngine
+
+#              0  1  2  3  4  5  6
+DOCS = [
+    np.array([1, 2, 3, 9, 1, 2, 3], dtype=np.int64),   # "1 2 3" at 0 and 4
+    np.array([3, 2, 1, 9, 9, 9], dtype=np.int64),      # reversed — no phrase
+    np.array([1, 9, 2, 9, 9, 3], dtype=np.int64),      # spread: window [0,5]
+    np.array([4, 4, 4, 4], dtype=np.int64),            # none of the words
+    np.array([1, 2, 9, 1, 2, 3], dtype=np.int64),      # "1 2 3" at 3
+]
+VOCAB = 12
+
+
+@pytest.fixture(scope="module")
+def built():
+    idx, model = wtbc.build_index(DOCS, VOCAB, block=128)
+    return idx, model
+
+
+def _words(model, ids):
+    return jnp.asarray(model.rank_of_word[np.asarray(ids)], jnp.int32)
+
+
+def test_phrase_tables_hand_checked(built):
+    idx, model = built
+    tf, first, iters = positional.phrase_tables(
+        idx, _words(model, [1, 2, 3]), jnp.ones(3, bool))
+    np.testing.assert_array_equal(np.asarray(tf), [2, 0, 0, 0, 1])
+    np.testing.assert_array_equal(np.asarray(first), [0, -1, -1, -1, 3])
+    assert int(iters) > 0
+
+
+def test_near_tables_hand_checked(built):
+    idx, model = built
+    tf, win, pos, _ = positional.near_tables(
+        idx, _words(model, [1, 3]), jnp.ones(2, bool))
+    # doc0: "1 . 3" at [2,4] -> width 3 wait: positions of 1: {0,4}, 3: {2,6}
+    #   best pair (4,6) width 3; (0,2) width 3 -> leftmost start 0
+    np.testing.assert_array_equal(np.asarray(win)[:3], [3, 3, 6])
+    np.testing.assert_array_equal(np.asarray(pos)[:3], [0, 0, 0])
+    assert int(np.asarray(win)[3]) == positional.INT32_MAX  # word absent
+    # doc4: 1 at {0,3}, 3 at {5} -> window [3,5] width 3
+    assert int(np.asarray(win)[4]) == 3 and int(np.asarray(pos)[4]) == 3
+    # tf rows are per-slot term frequencies
+    np.testing.assert_array_equal(np.asarray(tf)[0], [2, 1, 1, 0, 2])
+    np.testing.assert_array_equal(np.asarray(tf)[1], [2, 1, 1, 0, 1])
+
+
+def test_single_word_phrase_equals_occurrences(built):
+    idx, model = built
+    tf, first, _ = positional.phrase_tables(
+        idx, _words(model, [9]), jnp.ones(1, bool))
+    np.testing.assert_array_equal(np.asarray(tf), [1, 3, 3, 0, 1])
+    np.testing.assert_array_equal(np.asarray(first), [3, 3, 1, -1, 2])
+
+
+def test_doc_positions_extraction(built):
+    idx, model = built
+    w9 = _words(model, [9])[0]
+    pos = positional.doc_positions(idx, w9, jnp.int32(2), cap=4)
+    np.testing.assert_array_equal(np.asarray(pos), [1, 3, 4, -1])
+    pos = positional.doc_positions(idx, w9, jnp.int32(3), cap=4)
+    np.testing.assert_array_equal(np.asarray(pos), [-1, -1, -1, -1])
+
+
+def test_topk_positional_masked_slots(built):
+    """Padding slots (mask False) must not affect the phrase."""
+    idx, model = built
+    m = scoring.TfIdf()
+    words = jnp.concatenate([_words(model, [1, 2, 3]), jnp.zeros(2, jnp.int32)])
+    mask = jnp.array([True, True, True, False, False])
+    res = positional.topk_positional(idx, words, mask, m.idf(idx), k=5,
+                                     phrase=True, measure=m)
+    n = int(res.n_found)
+    assert {int(d) for d in np.asarray(res.docs)[:n]} == {0, 4}
+    assert all(int(l) == 3 for l in np.asarray(res.match_len)[:n])
+
+
+def test_engine_phrase_beats_unordered(built):
+    """Facade end-to-end: phrase vs AND on the same words differ exactly on
+    ordering; near honours the window; matches() payloads line up."""
+    engine = SearchEngine.build(DOCS, EngineConfig(block=128),
+                                vocab_size=VOCAB)
+    res_and = engine.search([[1, 2, 3]], k=5, mode="and")
+    res_phr = engine.search([[1, 2, 3]], k=5, mode="phrase")
+    assert {d for d, _ in res_and.hits(0)} == {0, 1, 2, 4}
+    assert {d for d, *_ in res_phr.matches(0)} == {0, 4}
+    assert res_phr.matches(0)[0][0] == 0          # two matches outrank one
+    # near is unordered: doc1's "3 2 1" also fits a width-3 window
+    res_near = engine.search([[1, 2, 3]], k=5, mode="near", window=3)
+    assert {d for d, *_ in res_near.matches(0)} == {0, 1, 4}
+    res_wide = engine.search([[1, 2, 3]], k=5, mode="near", window=6)
+    assert {d for d, *_ in res_wide.matches(0)} == {0, 1, 2, 4}
+    # doc1 "3 2 1": minimal window is the whole prefix, width 3
+    d1 = dict((d, (p, l)) for d, _, p, l in res_wide.matches(0))[1]
+    assert d1 == (0, 3)
+
+
+def test_engine_word_positions():
+    engine = SearchEngine.build(DOCS, EngineConfig(block=128),
+                                vocab_size=VOCAB)
+    pos = engine.word_positions(0, [1, 9, 11], cap=4)
+    np.testing.assert_array_equal(pos[1], [0, 4])
+    np.testing.assert_array_equal(pos[9], [3])
+    np.testing.assert_array_equal(pos[11], [])
+    with pytest.raises(ValueError, match="word id"):
+        engine.word_positions(0, [0])
+
+
+def test_empty_and_absent_queries(built):
+    idx, model = built
+    m = scoring.TfIdf()
+    # word 11 never occurs: phrase and near must both come back empty
+    words = _words(model, [1, 11])
+    res = positional.topk_positional(idx, words, jnp.ones(2, bool), m.idf(idx),
+                                     k=5, phrase=True, measure=m)
+    assert int(res.n_found) == 0
+    res = positional.topk_positional(idx, words, jnp.ones(2, bool), m.idf(idx),
+                                     k=5, phrase=False, measure=m, window=50)
+    assert int(res.n_found) == 0
+    # fully-masked query: empty, not an error, at the kernel level
+    res = positional.topk_positional(idx, words, jnp.zeros(2, bool),
+                                     m.idf(idx), k=5, phrase=True, measure=m)
+    assert int(res.n_found) == 0
