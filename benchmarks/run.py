@@ -1,12 +1,18 @@
 """Benchmark runner: one function per paper table + roofline report.
 
     PYTHONPATH=src python -m benchmarks.run [--full] [--skip-distributed]
+                                            [--json PATH]
 
 Prints ``name,us_per_call,derived`` CSV rows (the harness contract).
+``--json PATH`` additionally writes the rows as a machine-readable artifact
+(``{"bench": {name: us_per_call}, "beam_sweep": {...}}`` — the BENCH_PR3.json
+CI artifact that seeds the perf trajectory; the beam sweep entries carry
+iters/pops and their ratios vs P=1).
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
 
@@ -19,11 +25,24 @@ def main() -> None:
     ap.add_argument("--docs", type=int, default=2500)
     ap.add_argument("--mean-doc-len", type=int, default=200)
     ap.add_argument("--vocab", type=int, default=30_000)
+    ap.add_argument("--json", type=str, default=None, metavar="PATH",
+                    help="also write results as a JSON artifact")
     args = ap.parse_args()
 
     from benchmarks import (common, distributed_scaling, table1_compression,
                             table2_conjunctive, table3_bagofwords,
-                            table4_positional)
+                            table4_positional, table5_beam)
+
+    rows: dict[str, float] = {}
+
+    def collect(line: str) -> None:
+        """Print a CSV row and record it for the --json artifact."""
+        print(line)
+        try:
+            name, us, _derived = line.split(",", 2)
+            rows[name] = float(us)
+        except ValueError:
+            pass
 
     t0 = time.time()
     print("# building benchmark corpus ...", file=sys.stderr, flush=True)
@@ -33,7 +52,7 @@ def main() -> None:
           f"build {bench.build_s:.1f}s", file=sys.stderr, flush=True)
 
     print("name,us_per_call,derived")
-    table1_compression.run(bench)
+    table1_compression.run(bench, print_rows=collect)
 
     if args.full:
         sweep = dict(n_queries=32, words_list=(1, 2, 3, 4, 6), ks=(10, 20),
@@ -45,29 +64,39 @@ def main() -> None:
                      band_names=("i", "ii", "iii"))
         sweep3 = dict(n_queries=16, words_list=(2, 4), ks=(10,),
                       band_names=("i", "ii", "iii"))
-    table2_conjunctive.run(bench, conjunctive=True, **sweep)
-    table3_bagofwords.run(bench, **sweep3)
+    table2_conjunctive.run(bench, conjunctive=True, print_rows=collect, **sweep)
+    table3_bagofwords.run(bench, print_rows=collect, **sweep3)
     if args.full:
         table4_positional.run(bench, n_queries=32, words_list=(2, 3, 4),
-                              ks=(10, 20), windows=(4, 16, 64))
+                              ks=(10, 20), windows=(4, 16, 64),
+                              print_rows=collect)
     else:
-        table4_positional.run(bench)
+        table4_positional.run(bench, print_rows=collect)
+
+    beam = table5_beam.run(bench, print_rows=collect,
+                           with_sharded=not args.skip_distributed)
 
     if not args.skip_distributed:
-        distributed_scaling.run()
+        distributed_scaling.run(print_rows=collect)
 
     # roofline summary (reads dry-run artifacts if present)
     try:
         from repro.analysis import roofline
-        rows = roofline.load_all("single")
-        for r in rows:
+        for r in roofline.load_all("single"):
             if r.skipped:
                 continue
-            print(common.csv_row(
+            collect(common.csv_row(
                 f"roofline/{r.cell.replace(':', '__')}", 0.0,
                 f"dom={r.dominant};frac={r.roofline_fraction():.3f}"))
     except Exception as e:  # artifacts absent: benches still usable
         print(f"# roofline artifacts unavailable: {e}", file=sys.stderr)
+
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"bench": rows, "beam_sweep": beam,
+                       "config": {"docs": args.docs, "full": args.full}},
+                      f, indent=2, sort_keys=True)
+        print(f"# wrote {args.json}", file=sys.stderr)
 
     print(f"# total {time.time()-t0:.1f}s", file=sys.stderr)
 

@@ -43,6 +43,7 @@ def main():
     for name, qs, kw in [
         ("DR/AND", queries, dict(mode="and", strategy="dr")),
         ("DR/OR", queries, dict(mode="or", strategy="dr")),
+        ("DR/OR·16", queries, dict(mode="or", strategy="dr", beam_width=16)),
         ("DRB/AND", queries, dict(mode="and", strategy="drb")),
         ("BM25/OR", queries, dict(mode="or", strategy="auto", measure="bm25")),
         ("PHRASE", grams, dict(mode="phrase")),
@@ -55,6 +56,10 @@ def main():
         jax.block_until_ready(res.scores)
         dt = (time.time() - t0) / args.batch * 1e3
         extra = ""
+        if res.beam_width > 1:
+            d = res.diagnostics
+            extra = (f" | beam {res.beam_width}: {int(np.sum(d['work']))} "
+                     f"trips / {int(np.sum(d['pops']))} pops")
         if res.match_pos is not None:
             m = res.matches(0)
             if m:

@@ -201,7 +201,8 @@ def distributed_topk(sharded: ShardedWTBC, words: jnp.ndarray, wmask: jnp.ndarra
                      max_df_cap: int = 256,
                      max_pops: int | None = None,
                      measure=None,
-                     idf: jnp.ndarray | None = None) -> ranked.DRResult:
+                     idf: jnp.ndarray | None = None,
+                     beam_width: int = 1) -> ranked.DRResult:
     """Run a top-k query over the sharded index under ``mesh``.
 
     method: 'dr-and' | 'dr-or' | 'drb-and' | 'drb-or'.
@@ -212,6 +213,9 @@ def distributed_topk(sharded: ShardedWTBC, words: jnp.ndarray, wmask: jnp.ndarra
     idf: (V,) replicated scoring table; defaults to ``sharded.global_idf``
     (tf-idf form).  Pass a measure-specific table (derivable from
     ``sharded.global_df``) so shard scores match the single-host backend.
+    beam_width: per-shard frontier width for the DR / DRB-AND loop cores
+    (DESIGN.md §6); each shard runs the identical beam the single-host
+    backend would.
     """
     from repro.core import scoring
     measure = measure or scoring.TfIdf()
@@ -232,7 +236,7 @@ def distributed_topk(sharded: ShardedWTBC, words: jnp.ndarray, wmask: jnp.ndarra
         global_avg_dl=P(),
         n_shards=sharded.n_shards)
     in_specs = (sharded_specs, P(), P(), P())
-    out_specs = (P(), P(), P(), P())
+    out_specs = (P(), P(), P(), P(), P(), P())
 
     def local(sh: ShardedWTBC, words, wmask, idf_tab):
         batched = words.ndim == 2                      # (B, Q) query batches
@@ -242,12 +246,14 @@ def distributed_topk(sharded: ShardedWTBC, words: jnp.ndarray, wmask: jnp.ndarra
             if method == "dr-and" or method == "dr-or":
                 return ranked.topk_dr(idx, words1, wmask1, idf_tab,
                                       k=k, conjunctive=(method == "dr-and"),
-                                      heap_cap=heap_cap, max_pops=max_pops)
+                                      heap_cap=heap_cap, max_pops=max_pops,
+                                      beam_width=beam_width)
             aux = jax.tree.map(lambda x: x[0], sh.aux)
             if method == "drb-and":
                 return drb_mod.topk_drb_and(idx, aux, words1, wmask1, measure,
                                             k=k, idf=idf_tab,
-                                            avg_dl=sh.global_avg_dl)
+                                            avg_dl=sh.global_avg_dl,
+                                            beam_width=beam_width)
             if method == "drb-or":
                 return drb_mod.topk_drb_or(idx, aux, words1, wmask1, measure,
                                            k=k, max_df_cap=max_df_cap,
@@ -270,11 +276,15 @@ def distributed_topk(sharded: ShardedWTBC, words: jnp.ndarray, wmask: jnp.ndarra
         top_s, ti = jax.lax.top_k(all_s, k)
         top_d = jnp.take_along_axis(all_d, ti, axis=-1)
         n_found = jnp.sum(top_s > -jnp.inf, axis=-1).astype(jnp.int32)
-        iters = res.iters
+        # work metrics sum over shards; overflow is any-shard
+        iters, pops, over = res.iters, res.pops, res.overflowed.astype(jnp.int32)
         for ax in axes:
             iters = jax.lax.psum(iters, ax)
-        return (jnp.where(top_s > -jnp.inf, top_d, -1), top_s, n_found, iters)
+            pops = jax.lax.psum(pops, ax)
+            over = jax.lax.psum(over, ax)
+        return (jnp.where(top_s > -jnp.inf, top_d, -1), top_s, n_found, iters,
+                pops, over > 0)
 
     fn = _shard_map(local, mesh=mesh, in_specs=in_specs, out_specs=out_specs)
-    docs, scores, n_found, iters = fn(sharded, words, wmask, idf)
-    return ranked.DRResult(docs, scores, n_found, iters)
+    docs, scores, n_found, iters, pops, over = fn(sharded, words, wmask, idf)
+    return ranked.DRResult(docs, scores, n_found, iters, pops, over)

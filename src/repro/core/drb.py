@@ -29,7 +29,7 @@ import numpy as np
 
 from repro.core import bitvec, heap as H, wtbc
 from repro.core.bitvec import BitVec
-from repro.core.ranked import DRResult, count_words_range
+from repro.core.ranked import DRResult
 from repro.core.wtbc import WTBCIndex
 
 INT32_MAX = jnp.int32(2**31 - 1)
@@ -127,13 +127,16 @@ def word_occ(aux: DRBAux, w: jnp.ndarray) -> jnp.ndarray:
 # conjunctive (AND) — the paper's triplet walk
 # ---------------------------------------------------------------------------
 
-@functools.partial(jax.jit, static_argnames=("k", "measure"))
+@functools.partial(jax.jit, static_argnames=("k", "measure", "beam_width"))
 def topk_drb_and(idx: WTBCIndex, aux: DRBAux, words: jnp.ndarray,
                  wmask: jnp.ndarray, measure, *, k: int,
                  idf: jnp.ndarray | None = None,
-                 avg_dl: jnp.ndarray | None = None) -> DRResult:
-    """Paper §3.2 conjunctive search.  O(df_min) candidate iterations, each with
-    one WTBC locate + 2Q count-ranges + Q bitmap ranks.
+                 avg_dl: jnp.ndarray | None = None,
+                 beam_width: int = 1) -> DRResult:
+    """Paper §3.2 conjunctive search.  O(df_min) candidate iterations; each
+    iteration verifies ``beam_width`` (= P) candidate documents of the rarest
+    word at once — P locates, then one fused batched descent for all P×Q
+    in-document counts plus the Q cursor-advance prefix counts (DESIGN.md §6).
 
     ``idf``/``avg_dl`` default to this index's own statistics; distributed
     callers pass the *global* tables so shard scores are comparable.
@@ -142,8 +145,15 @@ def topk_drb_and(idx: WTBCIndex, aux: DRBAux, words: jnp.ndarray,
     (idf < eps) is excluded from the conjunction and from scoring (paper
     footnote 1); a masked word **absent from the collection** (df = 0) makes
     the conjunction empty.
+
+    Beam exactness is trivial here (unlike DR): the walk enumerates and fully
+    verifies every candidate regardless of P — P only changes how many are
+    in flight per loop trip; consecutive occurrences landing in one document
+    are deduplicated before the bounded top-k insert.  ``beam_width=1`` is
+    step-for-step the paper's triplet walk.
     """
     Q = words.shape[0]
+    P = int(beam_width)
     valid = wmask & aux.has_bm[words]
     idf_all = measure.idf(idx) if idf is None else idf
     idf_w = jnp.where(valid, idf_all[words], 0.0).astype(jnp.float32)
@@ -153,40 +163,67 @@ def topk_drb_and(idx: WTBCIndex, aux: DRBAux, words: jnp.ndarray,
         avg_dl = jnp.sum(idx.doc_len.astype(jnp.float32)) / idx.n_docs.astype(jnp.float32)
     absent = jnp.any(wmask & (df_w == 0))
 
-    # state: per-word occurrence cursor p (0-based, sits on a 1-bit), docs left
+    # state: per-word occurrence cursor p (0-based, sits on a 1-bit), docs
+    # left, candidate-documents-examined counter (the pops work metric)
     p0 = jnp.zeros((Q,), jnp.int32)
     nd0 = jnp.where(valid, df_w, INT32_MAX)
     topk0 = H.topk_make(k)
 
     def cond(st):
-        p, nd, topk, it = st
+        p, nd, topk, it, cands = st
         return (jnp.min(nd) > 0) & jnp.any(valid) & ~absent & (it < idx.n_docs + 1)
 
     def body(st):
-        p, nd, topk, it = st
+        p, nd, topk, it, cands = st
         qstar = jnp.argmin(jnp.where(valid, nd, INT32_MAX))
         wstar = words[qstar]
-        # candidate document: locate the (p+1)-th occurrence of the rarest word
-        pos = wtbc.locate(idx, wstar, p[qstar] + 1)
-        d = wtbc.doc_of_pos(idx, pos)
-        lo, hi = wtbc.segment_extent(idx, d, d + 1)
-        cnt_hi = count_words_range(idx, words, jnp.int32(0), hi)
-        cnt_lo = count_words_range(idx, words, jnp.int32(0), lo)
-        tf = (cnt_hi - cnt_lo) * valid
-        present = jnp.all((tf > 0) | ~valid) & jnp.any(valid)
-        score = measure.score(tf, idf_w, idx.doc_len[d], avg_dl)
-        topk = H.topk_insert(topk, score, d, present)
-        # advance all cursors past this document (paper: recompute triplets)
-        p_new = jnp.where(valid, cnt_hi, p)
-        nd_new = jax.vmap(lambda w_, c_: word_rank1(aux, w_, c_))(words, cnt_hi)
-        nd_new = jnp.where(valid, df_w - nd_new, INT32_MAX)
-        return p_new, nd_new, topk, it + 1
+        occ_star = idx.occ[wstar]
+        # candidates: the next P occurrences of the rarest word (their
+        # documents are non-decreasing; the first is always a fresh one
+        # because cursors sit on document boundaries)
+        js = p[qstar] + 1 + jnp.arange(P, dtype=jnp.int32)
+        valid_j = js <= occ_star
+        pos_j = jax.vmap(lambda j: wtbc.locate(
+            idx, wstar, jnp.minimum(j, jnp.maximum(occ_star, 1))))(js)
+        d_j = jax.vmap(lambda pp: wtbc.doc_of_pos(idx, pp))(pos_j)
+        new_j = valid_j & (d_j != jnp.concatenate(
+            [jnp.full((1,), -1, jnp.int32), d_j[:-1]]))
+        lo_j, hi_j = wtbc.segment_extent(idx, d_j, d_j + 1)
+        d_last = jnp.max(jnp.where(valid_j, d_j, -1))
+        hi_last = wtbc.segment_extent(idx, d_last, d_last + 1)[1]
+        # one fused batch: P×Q in-document tfs + Q prefix counts at the last
+        # candidate's end (the cursor-skip counts).  At P=1 this is the same
+        # 2Q rank-descent workload as the classical walk.
+        cnt = wtbc.count_range_batch(
+            idx,
+            jnp.concatenate([jnp.tile(words, P), words]),
+            jnp.concatenate([jnp.repeat(lo_j, Q), jnp.zeros((Q,), jnp.int32)]),
+            jnp.concatenate([jnp.repeat(hi_j, Q),
+                             jnp.broadcast_to(hi_last, (Q,))]))
+        tf = cnt[:P * Q].reshape(P, Q) * valid                     # (P, Q)
+        cnt_last = cnt[P * Q:]
+        present = new_j & jnp.all((tf > 0) | ~valid, axis=-1) & jnp.any(valid)
+        score = measure.score(tf, idf_w, idx.doc_len[d_j], avg_dl)  # (P,)
 
-    p, nd, topk, iters = jax.lax.while_loop(cond, body, (p0, nd0, topk0, jnp.int32(0)))
+        def ins(tk, x):
+            s_, d_, en_ = x
+            return H.topk_insert(tk, s_, d_, en_), None
+
+        topk, _ = jax.lax.scan(ins, topk, (score, d_j, present))
+        # advance all cursors past the last candidate (paper: recompute
+        # triplets)
+        p_new = jnp.where(valid, cnt_last, p)
+        nd_new = jax.vmap(lambda w_, c_: word_rank1(aux, w_, c_))(words, cnt_last)
+        nd_new = jnp.where(valid, df_w - nd_new, INT32_MAX)
+        return (p_new, nd_new, topk, it + 1,
+                cands + jnp.sum(new_j.astype(jnp.int32)))
+
+    p, nd, topk, iters, cands = jax.lax.while_loop(
+        cond, body, (p0, nd0, topk0, jnp.int32(0), jnp.int32(0)))
     res = H.topk_sorted(topk)
     found = jnp.sum(res.scores > -jnp.inf).astype(jnp.int32)
     return DRResult(jnp.where(res.scores > -jnp.inf, res.docs, -1),
-                    res.scores, found, iters)
+                    res.scores, found, iters, cands, jnp.zeros((), bool))
 
 
 # ---------------------------------------------------------------------------
@@ -250,4 +287,5 @@ def topk_drb_or(idx: WTBCIndex, aux: DRBAux, words: jnp.ndarray,
     top_s, top_d = jax.lax.top_k(scores, k)
     found = jnp.sum(top_s > -jnp.inf).astype(jnp.int32)
     return DRResult(jnp.where(top_s > -jnp.inf, top_d, -1).astype(jnp.int32),
-                    top_s.astype(jnp.float32), found, jnp.int32(max_df_cap))
+                    top_s.astype(jnp.float32), found, jnp.int32(max_df_cap),
+                    jnp.int32(max_df_cap), jnp.zeros((), bool))

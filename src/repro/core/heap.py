@@ -6,13 +6,24 @@ binary heap over a pre-allocated score array plus an int32 payload matrix.
 Pushes/pops are O(log cap) with dynamic index updates — the whole retrieval
 loop stays on-device with no host round trips.
 
-All operations take and return the state tuple ``(scores, payload, size)``:
-  scores  (cap,)   float32, max-heap ordered prefix [0, size)
-  payload (cap, P) int32
-  size    ()       int32
+All operations take and return the state tuple
+``(scores, payload, size, overflowed)``:
+  scores     (cap,)   float32, max-heap ordered prefix [0, size)
+  payload    (cap, P) int32
+  size       ()       int32
+  overflowed ()       bool — any enabled push ever hit a full heap
 
 ``enable`` flags make pushes/pops conditional without ``lax.cond`` branches on
 the large state (disabled ops are no-ops with the same cost).
+
+A push against a full heap *drops the element* (the search stays total but may
+become inexact); ``overflowed`` latches that event so callers — `DRResult` /
+`SearchResults.diagnostics` — can surface it instead of silently returning
+corrupted rankings (DESIGN.md §6).
+
+``pop_p`` / ``push_many`` are the frontier-batched (beam) entry points: P
+ordered pops and a bulk reinsert per search iteration, so Algorithm 1's rank
+workload can be batched P-wide between heap interactions (DESIGN.md §6).
 """
 from __future__ import annotations
 
@@ -25,9 +36,10 @@ NEG_INF = jnp.float32(-jnp.inf)
 
 
 class Heap(NamedTuple):
-    scores: jnp.ndarray   # (cap,) float32
-    payload: jnp.ndarray  # (cap, P) int32
-    size: jnp.ndarray     # () int32
+    scores: jnp.ndarray      # (cap,) float32
+    payload: jnp.ndarray     # (cap, P) int32
+    size: jnp.ndarray        # () int32
+    overflowed: jnp.ndarray  # () bool
 
     @property
     def cap(self) -> int:
@@ -39,14 +51,19 @@ def make(cap: int, payload_width: int) -> Heap:
         scores=jnp.full((cap,), NEG_INF, dtype=jnp.float32),
         payload=jnp.zeros((cap, payload_width), dtype=jnp.int32),
         size=jnp.int32(0),
+        overflowed=jnp.zeros((), dtype=bool),
     )
 
 
 def push(h: Heap, score: jnp.ndarray, pay: jnp.ndarray,
          enable: jnp.ndarray | bool = True) -> Heap:
-    """Insert (score, pay); no-op when ``enable`` is False or heap is full."""
-    enable = jnp.asarray(enable) & (h.size < h.cap)
-    scores, payload, size = h
+    """Insert (score, pay); no-op when ``enable`` is False or heap is full.
+
+    A capacity-dropped enabled push latches ``overflowed``."""
+    want = jnp.asarray(enable)
+    enable = want & (h.size < h.cap)
+    overflowed = h.overflowed | (want & (h.size >= h.cap))
+    scores, payload, size, _ = h
     at = jnp.where(enable, size, jnp.int32(0))
     scores = scores.at[at].set(jnp.where(enable, score, scores[at]))
     payload = payload.at[at].set(jnp.where(enable, pay, payload[at]))
@@ -67,12 +84,12 @@ def push(h: Heap, score: jnp.ndarray, pay: jnp.ndarray,
 
     i0 = jnp.where(enable, size, jnp.int32(0))
     _, scores, payload = jax.lax.while_loop(cond, body, (i0, scores, payload))
-    return Heap(scores, payload, size + enable.astype(jnp.int32))
+    return Heap(scores, payload, size + enable.astype(jnp.int32), overflowed)
 
 
 def pop(h: Heap) -> tuple[jnp.ndarray, jnp.ndarray, Heap]:
     """Remove and return the max element.  Caller guards ``size > 0``."""
-    scores, payload, size = h
+    scores, payload, size, overflowed = h
     top_s, top_p = scores[0], payload[0]
     last = jnp.maximum(size - 1, 0)
     scores = scores.at[0].set(scores[last]).at[last].set(NEG_INF)
@@ -99,7 +116,46 @@ def pop(h: Heap) -> tuple[jnp.ndarray, jnp.ndarray, Heap]:
         return c, sc, pl
 
     _, scores, payload = jax.lax.while_loop(cond, body, (jnp.int32(0), scores, payload))
-    return top_s, top_p, Heap(scores, payload, size)
+    return top_s, top_p, Heap(scores, payload, size, overflowed)
+
+
+# ---------------------------------------------------------------------------
+# frontier batching (beam search, DESIGN.md §6)
+# ---------------------------------------------------------------------------
+
+def pop_p(h: Heap, p: int) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, Heap]:
+    """Pop the ``p`` best elements (``p`` static).
+
+    Returns ``(scores (p,), payloads (p, W), valid (p,), heap)``; pops past
+    the current size are masked out (score -inf, valid False).  Scores come
+    out descending — successive heap pops — which the beam emission rule
+    relies on.  ``pop`` on an empty heap is already a structural no-op (the
+    sift guard sees size 0), so no per-step branching is needed.
+    """
+    size0 = h.size
+
+    def step(hp, _):
+        s, pay, hp = pop(hp)
+        return hp, (s, pay)
+
+    h, (scores, payloads) = jax.lax.scan(step, h, None, length=p)
+    valid = jnp.arange(p, dtype=jnp.int32) < size0
+    return jnp.where(valid, scores, NEG_INF), payloads, valid, h
+
+
+def push_many(h: Heap, scores: jnp.ndarray, pays: jnp.ndarray,
+              enable: jnp.ndarray) -> Heap:
+    """Bulk insert: ``scores (m,)``, ``pays (m, W)``, ``enable (m,)``.
+
+    Sequential gated pushes in array order (the order is observable through
+    pop tie-breaking, so beam callers keep it deterministic)."""
+
+    def step(hp, x):
+        s, pay, en = x
+        return push(hp, s, pay, en), None
+
+    h, _ = jax.lax.scan(step, h, (scores, pays, enable))
+    return h
 
 
 # ---------------------------------------------------------------------------

@@ -65,8 +65,11 @@ def doc_positions(idx: WTBCIndex, w: jnp.ndarray, d: jnp.ndarray,
     ``d``, -1 padded to the static ``cap`` (per-document occurrence-position
     extraction: one count + one ``locate`` per occurrence)."""
     lo, hi = wtbc.segment_extent(idx, d, d + 1)
-    before = wtbc.count_range(idx, w, jnp.int32(0), lo)
-    tf = wtbc.count_range(idx, w, lo, hi)
+    # both counts in one batched descent (the beam cores' rank entry point)
+    cnt = wtbc.count_range_batch(idx, jnp.stack([w, w]),
+                                 jnp.stack([jnp.int32(0), lo]),
+                                 jnp.stack([lo, hi]))
+    before, tf = cnt[0], cnt[1]
     js = jnp.arange(cap, dtype=jnp.int32)
     pos = jax.vmap(
         lambda j: wtbc.locate(idx, w, before + jnp.minimum(j, tf - 1) + 1))(js)

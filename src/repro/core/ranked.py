@@ -21,6 +21,18 @@ Faithfulness + two deliberate deviations (DESIGN.md §2):
   scores carry no accumulated float error and conjunctive emptiness checks
   (tf == 0) are exact.
 
+**Frontier batching** (DESIGN.md §6): each ``while_loop`` iteration pops the
+``beam_width`` (= P) best segments at once, computes all P×Q left-child term
+frequencies with ONE fused batched descent (``wtbc.count_range_batch``), and
+bulk-reinserts the children.  Emission stays exact: a popped singleton is
+emitted only if its score is >= everything still pending — the heap top after
+the pops and every popped multi-document segment (whose children it bounds);
+the rest are pushed back.  ``beam_width=1`` reproduces the classical one-pop
+Algorithm 1 exactly (same pop order, same emission, same heap evolution);
+larger P trades a few extra segment expansions for P-wide memory-level
+parallelism in the rank workload — the compact-top-k batching lever of
+Konow & Navarro's "Faster Compact Top-k Document Retrieval".
+
 The full search is one jitted ``lax.while_loop``; batched queries via ``vmap``.
 """
 from __future__ import annotations
@@ -40,36 +52,59 @@ class DRResult(NamedTuple):
     docs: jnp.ndarray    # (k,) int32, -1 padded, sorted by descending score
     scores: jnp.ndarray  # (k,) float32, -inf padded
     n_found: jnp.ndarray # () int32
-    iters: jnp.ndarray   # () int32 — pops performed (work metric for §Perf)
+    iters: jnp.ndarray   # () int32 — while-loop trips (work metric for §Perf)
+    # () int32 — segments actually popped (== iters at beam_width=1); the
+    # beam's emitted-doc overhead metric is pops(P) / pops(1)
+    pops: jnp.ndarray | None = None
+    # () bool — a heap push was dropped at capacity: the ranking may be
+    # inexact and the caller must not trust it silently (DESIGN.md §6)
+    overflowed: jnp.ndarray | None = None
 
 
 def count_words_range(idx: WTBCIndex, words: jnp.ndarray,
                       lo: jnp.ndarray, hi: jnp.ndarray) -> jnp.ndarray:
-    """tf of each query word in root range [lo, hi); (Q,) int32."""
-    return jax.vmap(lambda w: wtbc.count_range(idx, w, lo, hi))(words)
+    """tf of each query word in root range [lo, hi); (Q,) int32.
+
+    One batched descent for the whole word set (kernels-on-TPU: a single
+    fused ``wavelet_descent`` launch)."""
+    Q = words.shape[0]
+    return wtbc.count_range_batch(idx, words, jnp.broadcast_to(lo, (Q,)),
+                                  jnp.broadcast_to(hi, (Q,)))
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("k", "conjunctive", "heap_cap", "max_pops"))
+                   static_argnames=("k", "conjunctive", "heap_cap", "max_pops",
+                                    "beam_width"))
 def topk_dr(idx: WTBCIndex, words: jnp.ndarray, wmask: jnp.ndarray,
             idf: jnp.ndarray, *, k: int, conjunctive: bool,
-            heap_cap: int, max_pops: int | None = None) -> DRResult:
-    """Algorithm 1.  ``words`` (Q,) word-ranks, ``wmask`` (Q,) valid-word mask,
-    ``idf`` (V,) precomputed idf table.  ``heap_cap`` >= 2*n_docs + 2 makes the
-    search exact (the implicit split tree has < 2*n_docs nodes).
+            heap_cap: int, max_pops: int | None = None,
+            beam_width: int = 1) -> DRResult:
+    """Algorithm 1, frontier-batched.  ``words`` (Q,) word-ranks, ``wmask``
+    (Q,) valid-word mask, ``idf`` (V,) precomputed idf table.  ``heap_cap``
+    >= 2*n_docs + 2 makes the search exact (the implicit split tree has
+    < 2*n_docs nodes; beam re-pushes never exceed that bound because a
+    segment occupies at most one heap slot at a time).
 
     ``max_pops`` is the any-time budget (straggler mitigation, DESIGN.md §4):
-    the search stops after that many queue pops and returns the documents
-    emitted so far — every emitted document is still exactly ranked."""
+    the search stops once that many segments have been popped and returns the
+    documents emitted so far — every emitted document is still exactly
+    ranked.  With ``beam_width`` = P > 1 the budget is enforced at iteration
+    granularity (overshoot < P).
+
+    ``beam_width`` = P pops P segments per iteration and batches their rank
+    workload into one fused call; P=1 is the classical exact pop order.
+    """
     Q = words.shape[0]
+    P = int(beam_width)
     idf_w = jnp.where(wmask, idf[words], 0.0).astype(jnp.float32)
 
     def seg_score(tf):
-        return jnp.dot(tf.astype(jnp.float32), idf_w)
+        # (..., Q) int32 -> (...,) float32; matvec == the one-pop jnp.dot
+        return tf.astype(jnp.float32) @ idf_w
 
     def seg_valid(tf, score):
         if conjunctive:
-            return jnp.all((tf > 0) | ~wmask) & jnp.any(wmask)
+            return jnp.all((tf > 0) | ~wmask, axis=-1) & jnp.any(wmask)
         return score > 0.0
 
     n_docs = idx.n_docs
@@ -80,54 +115,87 @@ def topk_dr(idx: WTBCIndex, words: jnp.ndarray, wmask: jnp.ndarray,
     hp = H.make(heap_cap, 2 + Q)
     hp = H.push(hp, score0, pay0, seg_valid(tf0, score0))
 
-    out = H.topk_make(k)
-    # emission order is already globally sorted; track an explicit write cursor
-    out_docs = jnp.full((k,), -1, jnp.int32)
-    out_scores = jnp.full((k,), -jnp.inf, jnp.float32)
+    # emission order is already globally sorted; track an explicit write
+    # cursor.  Slot k is a trash slot for beam emissions past the k budget.
+    out_docs = jnp.full((k + 1,), -1, jnp.int32)
+    out_scores = jnp.full((k + 1,), -jnp.inf, jnp.float32)
 
     def cond(st):
-        hp, _, _, n_out, it = st
+        hp, _, _, n_out, it, pops = st
         ok = (n_out < k) & (hp.size > 0)
         if max_pops is not None:
-            ok = ok & (it < max_pops)
+            ok = ok & (pops < max_pops)
         return ok
 
     def body(st):
-        hp, out_docs, out_scores, n_out, it = st
-        score, pay, hp = H.pop(hp)
-        d0, d1 = pay[0], pay[1]
-        tf = pay[2:]
-        single = (d1 - d0) == 1
+        hp, out_docs, out_scores, n_out, it, pops = st
+        s_p, pay, valid, hp = H.pop_p(hp, P)          # scores descending
+        d0, d1, tf = pay[:, 0], pay[:, 1], pay[:, 2:]
+        single = valid & ((d1 - d0) == 1)
+        multi = valid & ~single
 
-        # emit when single
-        at = jnp.where(single, n_out, jnp.int32(0))
-        out_docs = out_docs.at[at].set(jnp.where(single, d0, out_docs[at]))
-        out_scores = out_scores.at[at].set(jnp.where(single, score, out_scores[at]))
-        n_out = n_out + single.astype(jnp.int32)
+        # exact-emission threshold: everything still pending is bounded by
+        # the heap top after the P pops and the popped multis' own scores
+        # (score is monotone over concatenation, so children never exceed
+        # their parent).  A popped singleton at or above that bound is the
+        # globally next answer; the rest go back into the heap.
+        t_pend = jnp.maximum(hp.scores[0],
+                             jnp.max(jnp.where(multi, s_p, H.NEG_INF)))
+        emit = single & (s_p >= t_pend)
+        slot = n_out + jnp.cumsum(emit.astype(jnp.int32)) - 1
+        write = emit & (slot < k)
+        at = jnp.where(write, slot, k)
+        out_docs = out_docs.at[at].set(jnp.where(write, d0, out_docs[at]))
+        out_scores = out_scores.at[at].set(
+            jnp.where(write, s_p, out_scores[at]))
+        n_out = jnp.minimum(n_out + jnp.sum(emit.astype(jnp.int32)), k)
 
-        # split when not single (degenerate math is masked out by `enable`s)
+        # split every popped multi at the doc boundary nearest its middle;
+        # all P×Q left-child tfs in ONE batched descent (degenerate math on
+        # masked lanes is discarded by the push enables)
         mid = (d0 + d1) // 2
         lo1, hi1 = wtbc.segment_extent(idx, d0, mid)
-        tf1 = count_words_range(idx, words, lo1, hi1) * wmask
+        tf1 = wtbc.count_range_batch(
+            idx, jnp.tile(words, P), jnp.repeat(lo1, Q),
+            jnp.repeat(hi1, Q)).reshape(P, Q) * wmask
         tf2 = tf - tf1
         s1, s2 = seg_score(tf1), seg_score(tf2)
-        pay1 = jnp.concatenate([jnp.stack([d0, mid]), tf1])
-        pay2 = jnp.concatenate([jnp.stack([mid, d1]), tf2])
-        hp = H.push(hp, s1, pay1, ~single & seg_valid(tf1, s1))
-        hp = H.push(hp, s2, pay2, ~single & seg_valid(tf2, s2))
-        return hp, out_docs, out_scores, n_out, it + 1
+        pay1 = jnp.concatenate([jnp.stack([d0, mid], axis=1), tf1], axis=1)
+        pay2 = jnp.concatenate([jnp.stack([mid, d1], axis=1), tf2], axis=1)
+        # bulk reinsert, parent-major (left, right, unemitted single): at
+        # P=1 this is push(left), push(right) — the one-pop order exactly.
+        # (At P=1 the popped item IS the heap max, so a popped singleton
+        # always clears the threshold and the re-push slot is statically
+        # dead — drop it to keep the default path at the classical cost.)
+        slots = ([s1, s2], [pay1, pay2],
+                 [multi & seg_valid(tf1, s1), multi & seg_valid(tf2, s2)])
+        if P > 1:
+            slots[0].append(s_p)
+            slots[1].append(pay)
+            slots[2].append(single & ~emit)
+        W = len(slots[0])
+        push_s = jnp.stack(slots[0], axis=1).reshape(W * P)
+        push_pay = jnp.stack(slots[1], axis=1).reshape(W * P, 2 + Q)
+        push_en = jnp.stack(slots[2], axis=1).reshape(W * P)
+        hp = H.push_many(hp, push_s, push_pay, push_en)
+        return (hp, out_docs, out_scores, n_out, it + 1,
+                pops + jnp.sum(valid.astype(jnp.int32)))
 
-    hp, out_docs, out_scores, n_out, iters = jax.lax.while_loop(
-        cond, body, (hp, out_docs, out_scores, jnp.int32(0), jnp.int32(0)))
-    return DRResult(out_docs, out_scores, n_out, iters)
+    hp, out_docs, out_scores, n_out, iters, pops = jax.lax.while_loop(
+        cond, body, (hp, out_docs, out_scores, jnp.int32(0), jnp.int32(0),
+                     jnp.int32(0)))
+    return DRResult(out_docs[:k], out_scores[:k], n_out, iters, pops,
+                    hp.overflowed)
 
 
 def topk_dr_batch(idx: WTBCIndex, words: jnp.ndarray, wmask: jnp.ndarray,
                   idf: jnp.ndarray, *, k: int, conjunctive: bool,
-                  heap_cap: int, max_pops: int | None = None) -> DRResult:
+                  heap_cap: int, max_pops: int | None = None,
+                  beam_width: int = 1) -> DRResult:
     """Batched queries: ``words``/``wmask`` are (B, Q)."""
     fn = functools.partial(topk_dr, k=k, conjunctive=conjunctive,
-                           heap_cap=heap_cap, max_pops=max_pops)
+                           heap_cap=heap_cap, max_pops=max_pops,
+                           beam_width=beam_width)
     return jax.vmap(lambda w, m: fn(idx, w, m, idf))(words, wmask)
 
 
@@ -157,4 +225,5 @@ def topk_bruteforce(idx: WTBCIndex, words, wmask, idf, *, k: int,
     top_s, top_d = jax.lax.top_k(scores, k)
     found = jnp.sum(top_s > -jnp.inf).astype(jnp.int32)
     top_d = jnp.where(top_s > -jnp.inf, top_d, -1)
-    return DRResult(top_d.astype(jnp.int32), top_s, found, jnp.int32(n_docs))
+    return DRResult(top_d.astype(jnp.int32), top_s, found, jnp.int32(n_docs),
+                    jnp.int32(n_docs), jnp.zeros((), bool))

@@ -267,6 +267,22 @@ def count_range(idx: WTBCIndex, w: jnp.ndarray, lo: jnp.ndarray, hi: jnp.ndarray
     return result
 
 
+def count_range_batch(idx: WTBCIndex, words: jnp.ndarray, los: jnp.ndarray,
+                      his: jnp.ndarray) -> jnp.ndarray:
+    """Batched count: occurrences of ``words[i]`` in root range
+    ``[los[i], his[i])`` for a flat batch of M triples; (M,) int32.
+
+    This is the frontier-batched search cores' rank entry point (DESIGN.md
+    §6): the whole (M × levels × 2) rank workload goes down in one shot —
+    a single fused ``wavelet_descent`` Pallas launch on TPU, one vectorized
+    rank batch per level elsewhere (see ``kernels.ops.wavelet_count_batch``).
+    """
+    from repro.kernels import ops
+    return ops.wavelet_count_batch(idx.levels, idx.cw, idx.cw_len,
+                                   idx.node_off, idx.base_rank,
+                                   words, los, his)
+
+
 def count_doc(idx: WTBCIndex, w: jnp.ndarray, d: jnp.ndarray) -> jnp.ndarray:
     """tf of word-rank w in document d."""
     lo, hi = segment_extent(idx, d, d + 1)

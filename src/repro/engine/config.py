@@ -29,12 +29,18 @@ class EngineConfig:
     default_window: proximity width (tokens) when ``search(mode="near")`` is
                called without ``window``.  Dynamic at query time — changing
                it never recompiles an executor.
+    default_beam_width: frontier width P of the DR / DRB-AND search loops
+               when ``search`` is called without ``beam_width`` (DESIGN.md
+               §6).  P is *static* per executor — like ``k``, each distinct
+               width compiles (and caches) its own program; P=1 is the
+               classical one-pop Algorithm 1.
     """
     block: int = bytemap.DEFAULT_BLOCK
     eps: float = 1e-6
     with_drb: bool = True
     default_k: int = 10
     default_window: int = 8
+    default_beam_width: int = 1
 
     def __post_init__(self):
         if self.block <= 0:
@@ -44,3 +50,6 @@ class EngineConfig:
         if self.default_window <= 0:
             raise ValueError(f"default_window must be positive, got "
                              f"{self.default_window}")
+        if self.default_beam_width <= 0:
+            raise ValueError(f"default_beam_width must be positive, got "
+                             f"{self.default_beam_width}")

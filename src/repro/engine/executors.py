@@ -35,6 +35,9 @@ class ExecutorKey(NamedTuple):
     batch_shape: tuple[int, int]   # (B, Q)
     budget: int | None    # DR max_pops
     df_cap: int | None    # DRB/OR gather width (pow2-bucketed); None otherwise
+    beam_width: int       # frontier width P of the DR / DRB-AND loop cores;
+                          # static (a distinct P is a distinct XLA program),
+                          # normalized to 1 on the paths with no search loop
 
 
 def make_single_dr(key: ExecutorKey, *, heap_cap: int, note):
@@ -45,7 +48,8 @@ def make_single_dr(key: ExecutorKey, *, heap_cap: int, note):
         note()
         return ranked.topk_dr_batch(idx, words, wmask, idf, k=key.k,
                                     conjunctive=conjunctive,
-                                    heap_cap=heap_cap, max_pops=key.budget)
+                                    heap_cap=heap_cap, max_pops=key.budget,
+                                    beam_width=key.beam_width)
 
     return jax.jit(fn)
 
@@ -56,7 +60,8 @@ def make_single_drb(key: ExecutorKey, *, note):
     if key.mode == "and":
         def one(idx, aux, w, m, idf, avg_dl):
             return drb.topk_drb_and(idx, aux, w, m, measure, k=key.k,
-                                    idf=idf, avg_dl=avg_dl)
+                                    idf=idf, avg_dl=avg_dl,
+                                    beam_width=key.beam_width)
     else:
         def one(idx, aux, w, m, idf, avg_dl):
             return drb.topk_drb_or(idx, aux, w, m, measure, k=key.k,
@@ -99,6 +104,6 @@ def make_sharded(key: ExecutorKey, *, mesh, shard_axes, heap_cap: int, note):
             sharded, words, wmask, k=key.k, method=method, mesh=mesh,
             shard_axes=shard_axes, heap_cap=heap_cap,
             max_df_cap=key.df_cap or 2, max_pops=key.budget,
-            measure=key.measure, idf=idf)
+            measure=key.measure, idf=idf, beam_width=key.beam_width)
 
     return jax.jit(fn)

@@ -296,7 +296,8 @@ class SearchEngine:
     def search(self, queries, *, k: int | None = None, mode: str = "and",
                strategy: str = "auto", measure="tfidf",
                budget: int | None = None,
-               window: int | None = None) -> SearchResults:
+               window: int | None = None,
+               beam_width: int | None = None) -> SearchResults:
         """Ranked top-k retrieval.
 
         queries:  (B, Q) / (Q,) array of word ids, or ragged lists of ids.
@@ -314,6 +315,15 @@ class SearchEngine:
         window:   proximity width in tokens, mode="near" only (default:
                   ``config.default_window``).  Traced — varying it reuses
                   the compiled executor.
+        beam_width: frontier width P of the looped search cores (DR and/or,
+                  DRB and; default ``config.default_beam_width``).  Each
+                  iteration pops/verifies P candidates and batches their
+                  rank workload into one fused call; P=1 is the classical
+                  exact pop order, P>1 keeps results exact while cutting
+                  loop trips ~P-fold (DESIGN.md §6).  Static, like ``k`` —
+                  each distinct P compiles once and is cached.  Ignored
+                  (normalized to 1) by the loop-free DRB/OR path; not
+                  applicable to phrase/near.
         """
         k = self.config.default_k if k is None else int(k)
         if k <= 0:
@@ -330,16 +340,27 @@ class SearchEngine:
         m = self._resolve_measure(measure)
         strat = self._resolve_strategy(strategy, m, budget, mode)
         if mode in POSITIONAL_MODES:
+            if beam_width is not None:
+                raise ValueError("beam_width applies to the looped and/or "
+                                 f"search cores only (got mode={mode!r})")
             if self.backend == "sharded":
                 raise ValueError(f"mode={mode!r} is not yet supported on the "
                                  "sharded backend; build a single-host engine")
             # positional top-k is a dense lax.top_k over the doc table
             k = min(k, self.n_docs)
+        if beam_width is None:
+            beam_width = self.config.default_beam_width
+        elif int(beam_width) < 1:
+            raise ValueError(f"beam_width must be >= 1, got {beam_width}")
+        beam_width = int(beam_width)
+        if mode in POSITIONAL_MODES or (strat == "drb" and mode == "or"):
+            beam_width = 1          # no search loop: don't split the executor
         ranks, mask = self._encode_queries(queries)
         df_cap = (self._df_cap(ranks, mask)
                   if strat == "drb" and mode == "or" else None)
         key = executors.ExecutorKey(self.backend, strat, mode, m, k,
-                                    tuple(ranks.shape), budget, df_cap)
+                                    tuple(ranks.shape), budget, df_cap,
+                                    beam_width)
         ex = self._executor(key)
         words, wmask = jnp.asarray(ranks), jnp.asarray(mask)
         match_pos = match_len = None
@@ -357,7 +378,10 @@ class SearchEngine:
         return SearchResults(docs=res.docs, scores=res.scores,
                              n_found=res.n_found, work=res.iters, k=k,
                              mode=mode, strategy=strat, measure=m.name,
-                             match_pos=match_pos, match_len=match_len)
+                             match_pos=match_pos, match_len=match_len,
+                             beam_width=beam_width,
+                             pops=getattr(res, "pops", None),
+                             overflowed=getattr(res, "overflowed", None))
 
     # -- post-processing -----------------------------------------------------
 

@@ -31,6 +31,14 @@ class SearchResults:
              (B, k) doc-relative token offset of the first phrase match /
              of the minimal proximity window; ``match_len`` its width in
              tokens; both -1 padded past ``n_found``.
+    beam_width: the frontier width the executor ran with (1 on loop-free
+             paths).
+    pops:    (B,) int32 segments / candidates actually examined (None on the
+             positional paths) — together with ``work`` (loop trips) this is
+             the beam's emitted-doc-overhead metric.
+    overflowed: (B,) bool — a search heap dropped a push at capacity; the
+             affected query's ranking may be incomplete and should not be
+             trusted silently.  See :meth:`diagnostics`.
     """
     docs: jnp.ndarray
     scores: jnp.ndarray
@@ -42,6 +50,9 @@ class SearchResults:
     measure: str
     match_pos: jnp.ndarray | None = None
     match_len: jnp.ndarray | None = None
+    beam_width: int = 1
+    pops: jnp.ndarray | None = None
+    overflowed: jnp.ndarray | None = None
 
     def __post_init__(self):
         if self.docs.ndim != 2 or self.scores.shape != self.docs.shape:
@@ -78,3 +89,19 @@ class SearchResults:
     def doc_ids(self) -> np.ndarray:
         """(B, k) numpy view of the document ids (-1 padded)."""
         return np.asarray(self.docs)
+
+    @property
+    def diagnostics(self) -> dict:
+        """Per-query health/work counters as host arrays.
+
+        Keys: ``work`` (loop trips), ``beam_width``, and — when the backend
+        reports them — ``pops`` (segments/candidates examined) and
+        ``overflowed`` (heap-capacity drops; a True entry means that query's
+        ranking may be incomplete and the engine should be rebuilt with a
+        larger ``heap_cap`` or queried with a smaller k)."""
+        out = {"work": np.asarray(self.work), "beam_width": self.beam_width}
+        if self.pops is not None:
+            out["pops"] = np.asarray(self.pops)
+        if self.overflowed is not None:
+            out["overflowed"] = np.asarray(self.overflowed)
+        return out

@@ -18,6 +18,7 @@ from repro.core.bytemap import ByteMap
 from repro.kernels import byte_rank as _byte_rank_k
 from repro.kernels import bitmap_rank as _bitmap_rank_k
 from repro.kernels import topk_score as _topk_score_k
+from repro.kernels import wavelet_descent as _wavelet_descent_k
 from repro.kernels import ref
 
 _STATE = {"enabled": True}
@@ -60,6 +61,27 @@ def scored_topk(cands: jnp.ndarray, query: jnp.ndarray, *, k: int,
         return _topk_score_k.scored_topk(cands, query, k=k, tile=tile,
                                          interpret=not _on_tpu())
     return ref.scored_topk_ref(cands, query, k=k)
+
+
+def wavelet_count_batch(levels, cw, cw_len, node_off, base_rank,
+                        words, los, his) -> jnp.ndarray:
+    """Batched fused 3-level WTBC count (the Algorithm-1 hot path).
+
+    On TPU with kernels enabled this is ONE ``wavelet_descent`` launch for
+    the whole (M × levels × 2) rank workload.  Elsewhere it is the pure-jnp
+    batched descent (one vectorized rank batch per level): the interpret-mode
+    kernel iterates its grid sequentially, which inside the beam search's
+    ``while_loop`` is strictly slower than the vectorized oracle, so — unlike
+    the standalone ops above — the non-TPU default is the oracle.  Kernel /
+    oracle parity is pinned by tests/test_kernels.py, which runs the kernel
+    in interpret mode explicitly.
+    """
+    if _STATE["enabled"] and _on_tpu():
+        return _wavelet_descent_k.wavelet_descent(
+            levels, cw, cw_len, node_off, base_rank, words, los, his,
+            block=levels[0].block, interpret=False)
+    return ref.wavelet_count_ref(levels, cw, cw_len, node_off, base_rank,
+                                 words, los, his)
 
 
 def segment_tf_batch(bm: ByteMap, byte, bounds) -> "jnp.ndarray":

@@ -8,6 +8,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.core import bytemap
 from repro.core.bitvec import WORDS_PER_BLOCK
 
 
@@ -50,3 +51,30 @@ def scored_topk_ref(cands: jnp.ndarray, query: jnp.ndarray, *, k: int
                     ) -> tuple[jnp.ndarray, jnp.ndarray]:
     scores = cands.astype(jnp.float32) @ query.astype(jnp.float32)
     return jax.lax.top_k(scores, k)
+
+
+def wavelet_count_ref(levels, cw, cw_len, node_off, base_rank,
+                      words, los, his) -> jnp.ndarray:
+    """Batched 3-level count descent, pure jnp (mirrors wtbc.count_range).
+
+    Same math as the ``wavelet_descent`` kernel: per level the 2·M endpoint
+    ranks run as one vectorized batch (the level-to-level dependency is the
+    only sequential part).  Oracle for the kernel and the vmap-safe CPU path.
+    """
+    words = words.astype(jnp.int32)
+    M = words.shape[0]
+    a = los.astype(jnp.int32)
+    b = his.astype(jnp.int32)
+    res = jnp.zeros((M,), jnp.int32)
+    for L, lv in enumerate(levels):
+        byte = cw[words, L]
+        off = node_off[words, L]
+        base = base_rank[words, L]
+        pos = jnp.concatenate([off + a, off + b])            # (2M,)
+        r = jax.vmap(lambda bb, pp: bytemap.rank(lv, bb, pp))(
+            jnp.tile(byte, 2), pos)
+        ra, rb = r[:M] - base, r[M:] - base
+        is_leaf = cw_len[words] == (L + 1)
+        res = jnp.where(is_leaf, rb - ra, res)
+        a, b = ra, rb
+    return res

@@ -1,0 +1,128 @@
+"""Pallas TPU kernel: fused 3-level WTBC count descent (DESIGN.md §6).
+
+``count_range(w, lo, hi)`` — the inner operation of Algorithm 1 — performs two
+``rank_b`` per wavelet-tree level.  Launched through ``byte_rank`` that is six
+kernel launches per (word, range) triple, and the level-L positions depend on
+the level-(L-1) rank results, so the launches cannot even overlap.  This
+kernel fuses the whole root-to-leaf descent for a *batch* of M triples into a
+single launch: one grid step per triple, and inside each step the three levels
+run back-to-back out of VMEM.
+
+Because the level-1/2 tile indices are data-dependent (they come from the
+level-0/1 ranks computed *inside* the kernel), the usual scalar-prefetch
+BlockSpec gather cannot feed them.  Instead the level byte arrays and counter
+matrices stay in ``ANY`` memory space (HBM on TPU) and each rank issues a
+manual ``pltpu.make_async_copy`` of exactly one (block,) byte tile and one
+(256,) counter row into VMEM scratch — the same minimal traffic the BlockSpec
+pipeline would DMA, just with in-kernel indices.  The two endpoint DMAs of a
+level are started together and overlap.
+
+Per grid step: 3 levels × 2 endpoints × (tile DMA + counter-row DMA + masked
+compare-reduce).  The per-word node offsets / base ranks (scalar-prefetched)
+keep it at 2 ranks per level exactly like the scalar path in
+``wtbc.count_range``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.bytemap import ByteMap
+
+MAX_LEVELS = 3
+
+
+def _kernel(cwb_ref, off_ref, base_ref, cwlen_ref, lo_ref, hi_ref, len_ref,
+            d0, c0, d1, c1, d2, c2,
+            out_ref, tile, row, tsem, rsem, *, block: int,
+            n_blocks: tuple[int, ...]):
+    i = pl.program_id(0)
+    data_refs = (d0, d1, d2)
+    count_refs = (c0, c1, c2)
+
+    a = lo_ref[i]
+    b = hi_ref[i]
+    res = jnp.int32(0)
+    for L in range(MAX_LEVELS):
+        byte = cwb_ref[i, L]
+        off = off_ref[i, L]
+        base = base_ref[i, L]
+        length = len_ref[L]
+        pa = jnp.clip(off + a, 0, length)
+        pb = jnp.clip(off + b, 0, length)
+        # clamp the tile index into range; the residual cutoff then spans the
+        # whole final tile, which is exactly rank(length) (counter row blk +
+        # one full-tile count) — no special casing for pos == length
+        blk_a = jnp.minimum(pa // block, n_blocks[L] - 1)
+        blk_b = jnp.minimum(pb // block, n_blocks[L] - 1)
+        copies = (
+            pltpu.make_async_copy(data_refs[L].at[blk_a], tile.at[0], tsem.at[0]),
+            pltpu.make_async_copy(data_refs[L].at[blk_b], tile.at[1], tsem.at[1]),
+            pltpu.make_async_copy(count_refs[L].at[blk_a], row.at[0], rsem.at[0]),
+            pltpu.make_async_copy(count_refs[L].at[blk_b], row.at[1], rsem.at[1]),
+        )
+        for cp in copies:
+            cp.start()
+        for cp in copies:
+            cp.wait()
+        lane = jax.lax.broadcasted_iota(jnp.int32, (1, block), 1)
+        hit_a = (tile[0:1, :] == byte.astype(jnp.uint8)) & (lane < pa - blk_a * block)
+        hit_b = (tile[1:2, :] == byte.astype(jnp.uint8)) & (lane < pb - blk_b * block)
+        ra = row[0, byte] + jnp.sum(hit_a.astype(jnp.int32)) - base
+        rb = row[1, byte] + jnp.sum(hit_b.astype(jnp.int32)) - base
+        is_leaf = cwlen_ref[i] == (L + 1)
+        res = jnp.where(is_leaf, rb - ra, res)
+        a, b = ra, rb
+    out_ref[0] = res
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def wavelet_descent(levels: tuple[ByteMap, ...], cw: jnp.ndarray,
+                    cw_len: jnp.ndarray, node_off: jnp.ndarray,
+                    base_rank: jnp.ndarray, words: jnp.ndarray,
+                    los: jnp.ndarray, his: jnp.ndarray, *, block: int,
+                    interpret: bool = True) -> jnp.ndarray:
+    """Batched fused count: occurrences of word-rank ``words[i]`` in the root
+    range ``[los[i], his[i])``.  Returns (M,) int32.
+
+    ``levels`` are the WTBC's per-level ByteMaps (uniform ``block``); ``cw`` /
+    ``cw_len`` / ``node_off`` / ``base_rank`` the index's per-word tables.
+    """
+    M = words.shape[0]
+    words = words.astype(jnp.int32)
+    cwb = cw[words].astype(jnp.int32)                  # (M, 3) codeword bytes
+    offs = node_off[words]                             # (M, 3)
+    bases = base_rank[words]                           # (M, 3)
+    cwl = cw_len[words]                                # (M,)
+    lens = jnp.stack([lv.length for lv in levels])     # (3,)
+    n_blocks = tuple(lv.counts.shape[0] - 1 for lv in levels)
+    tiles = tuple(lv.data.reshape(n_blocks[L], block)
+                  for L, lv in enumerate(levels))
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=7,     # cwb, offs, bases, cwl, lo, hi, lens
+        grid=(M,),
+        in_specs=[pl.BlockSpec(memory_space=pltpu.ANY)] * 6,
+        out_specs=pl.BlockSpec((1,), lambda i, *_: (i,)),
+        scratch_shapes=[
+            pltpu.VMEM((2, block), jnp.uint8),    # endpoint byte tiles
+            pltpu.VMEM((2, 256), jnp.int32),      # endpoint counter rows
+            pltpu.SemaphoreType.DMA((2,)),
+            pltpu.SemaphoreType.DMA((2,)),
+        ],
+    )
+    fn = pl.pallas_call(
+        functools.partial(_kernel, block=block, n_blocks=n_blocks),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((M,), jnp.int32),
+        interpret=interpret,
+    )
+    return fn(cwb, offs, bases, cwl,
+              los.astype(jnp.int32), his.astype(jnp.int32), lens,
+              tiles[0], levels[0].counts,
+              tiles[1], levels[1].counts,
+              tiles[2], levels[2].counts)

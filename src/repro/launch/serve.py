@@ -38,6 +38,9 @@ def main():
                     help="DR any-time pop budget (straggler mitigation)")
     ap.add_argument("--window", type=int, default=None,
                     help="proximity width in tokens (mode=near only)")
+    ap.add_argument("--beam-width", type=int, default=None,
+                    help="frontier width P of the DR / DRB-AND search loops "
+                         "(default 1 = classical one-pop Algorithm 1)")
     ap.add_argument("--shards", type=int, default=0,
                     help="0 = single index; N = document-sharded over a local mesh")
     ap.add_argument("--seed", type=int, default=0)
@@ -62,7 +65,8 @@ def main():
                                         args.words, seed=args.seed)
     run = lambda: engine.search(queries, k=args.k, mode=args.mode,
                                 strategy=args.strategy, measure=args.measure,
-                                budget=args.budget, window=args.window)
+                                budget=args.budget, window=args.window,
+                                beam_width=args.beam_width)
 
     print("compiling ...", flush=True)
     t0 = time.time()
@@ -76,8 +80,14 @@ def main():
     res = run()
     jax.block_until_ready(res.scores)
     serve_s = time.time() - t0
+    diag = res.diagnostics
+    work = int(np.sum(diag["work"]))
+    extra = (f" | pops {int(np.sum(diag['pops']))}" if "pops" in diag else "")
+    if bool(np.any(diag.get("overflowed", False))):
+        extra += " | WARNING: heap overflow — rankings may be incomplete"
     print(f"compile {compile_s:.1f}s | {args.queries} queries in {serve_s*1e3:.1f}ms "
-          f"({serve_s/args.queries*1e3:.2f} ms/query) | routed to {res.strategy}")
+          f"({serve_s/args.queries*1e3:.2f} ms/query) | routed to {res.strategy} "
+          f"| beam {res.beam_width} | loop trips {work}{extra}")
     print("first query top-k docs:", np.asarray(res.docs[0])[:args.k].tolist())
     if res.match_pos is not None:
         print("first query matches (doc, score, pos, len):", res.matches(0))

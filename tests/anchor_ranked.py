@@ -1,0 +1,127 @@
+"""Differential anchors: the pre-beam one-pop search cores, verbatim.
+
+These are the classical (beam_width-less) implementations of Algorithm 1 and
+the DRB triplet walk exactly as they shipped before frontier batching; the
+beam rewrite at ``beam_width=1`` must reproduce their output *exactly* —
+docs, scores, emission order, pop counts (tests/test_beam.py).  They live in
+the test tree on purpose: they are specification pins, not product code.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import heap as H
+from repro.core import wtbc
+from repro.core.drb import INT32_MAX, word_rank1
+from repro.core.ranked import DRResult, count_words_range
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("k", "conjunctive", "heap_cap", "max_pops"))
+def topk_dr_onepop(idx, words, wmask, idf, *, k: int, conjunctive: bool,
+                   heap_cap: int, max_pops: int | None = None) -> DRResult:
+    """The original one-pop-per-iteration Algorithm 1 (pre-beam)."""
+    Q = words.shape[0]
+    idf_w = jnp.where(wmask, idf[words], 0.0).astype(jnp.float32)
+
+    def seg_score(tf):
+        return jnp.dot(tf.astype(jnp.float32), idf_w)
+
+    def seg_valid(tf, score):
+        if conjunctive:
+            return jnp.all((tf > 0) | ~wmask) & jnp.any(wmask)
+        return score > 0.0
+
+    n_docs = idx.n_docs
+    lo0, hi0 = wtbc.segment_extent(idx, jnp.int32(0), n_docs)
+    tf0 = count_words_range(idx, words, lo0, hi0) * wmask
+    score0 = seg_score(tf0)
+    pay0 = jnp.concatenate([jnp.stack([jnp.int32(0), n_docs]), tf0])
+    hp = H.make(heap_cap, 2 + Q)
+    hp = H.push(hp, score0, pay0, seg_valid(tf0, score0))
+
+    out_docs = jnp.full((k,), -1, jnp.int32)
+    out_scores = jnp.full((k,), -jnp.inf, jnp.float32)
+
+    def cond(st):
+        hp, _, _, n_out, it = st
+        ok = (n_out < k) & (hp.size > 0)
+        if max_pops is not None:
+            ok = ok & (it < max_pops)
+        return ok
+
+    def body(st):
+        hp, out_docs, out_scores, n_out, it = st
+        score, pay, hp = H.pop(hp)
+        d0, d1 = pay[0], pay[1]
+        tf = pay[2:]
+        single = (d1 - d0) == 1
+
+        at = jnp.where(single, n_out, jnp.int32(0))
+        out_docs = out_docs.at[at].set(jnp.where(single, d0, out_docs[at]))
+        out_scores = out_scores.at[at].set(jnp.where(single, score, out_scores[at]))
+        n_out = n_out + single.astype(jnp.int32)
+
+        mid = (d0 + d1) // 2
+        lo1, hi1 = wtbc.segment_extent(idx, d0, mid)
+        tf1 = count_words_range(idx, words, lo1, hi1) * wmask
+        tf2 = tf - tf1
+        s1, s2 = seg_score(tf1), seg_score(tf2)
+        pay1 = jnp.concatenate([jnp.stack([d0, mid]), tf1])
+        pay2 = jnp.concatenate([jnp.stack([mid, d1]), tf2])
+        hp = H.push(hp, s1, pay1, ~single & seg_valid(tf1, s1))
+        hp = H.push(hp, s2, pay2, ~single & seg_valid(tf2, s2))
+        return hp, out_docs, out_scores, n_out, it + 1
+
+    hp, out_docs, out_scores, n_out, iters = jax.lax.while_loop(
+        cond, body, (hp, out_docs, out_scores, jnp.int32(0), jnp.int32(0)))
+    return DRResult(out_docs, out_scores, n_out, iters)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "measure"))
+def topk_drb_and_onestep(idx, aux, words, wmask, measure, *, k: int,
+                         idf=None, avg_dl=None) -> DRResult:
+    """The original one-candidate-per-iteration DRB triplet walk (pre-beam)."""
+    Q = words.shape[0]
+    valid = wmask & aux.has_bm[words]
+    idf_all = measure.idf(idx) if idf is None else idf
+    idf_w = jnp.where(valid, idf_all[words], 0.0).astype(jnp.float32)
+    df_w = idx.df[words]
+    if avg_dl is None:
+        avg_dl = jnp.sum(idx.doc_len.astype(jnp.float32)) / idx.n_docs.astype(jnp.float32)
+    absent = jnp.any(wmask & (df_w == 0))
+
+    p0 = jnp.zeros((Q,), jnp.int32)
+    nd0 = jnp.where(valid, df_w, INT32_MAX)
+    topk0 = H.topk_make(k)
+
+    def cond(st):
+        p, nd, topk, it = st
+        return (jnp.min(nd) > 0) & jnp.any(valid) & ~absent & (it < idx.n_docs + 1)
+
+    def body(st):
+        p, nd, topk, it = st
+        qstar = jnp.argmin(jnp.where(valid, nd, INT32_MAX))
+        wstar = words[qstar]
+        pos = wtbc.locate(idx, wstar, p[qstar] + 1)
+        d = wtbc.doc_of_pos(idx, pos)
+        lo, hi = wtbc.segment_extent(idx, d, d + 1)
+        cnt_hi = count_words_range(idx, words, jnp.int32(0), hi)
+        cnt_lo = count_words_range(idx, words, jnp.int32(0), lo)
+        tf = (cnt_hi - cnt_lo) * valid
+        present = jnp.all((tf > 0) | ~valid) & jnp.any(valid)
+        score = measure.score(tf, idf_w, idx.doc_len[d], avg_dl)
+        topk = H.topk_insert(topk, score, d, present)
+        p_new = jnp.where(valid, cnt_hi, p)
+        nd_new = jax.vmap(lambda w_, c_: word_rank1(aux, w_, c_))(words, cnt_hi)
+        nd_new = jnp.where(valid, df_w - nd_new, INT32_MAX)
+        return p_new, nd_new, topk, it + 1
+
+    p, nd, topk, iters = jax.lax.while_loop(cond, body, (p0, nd0, topk0, jnp.int32(0)))
+    res = H.topk_sorted(topk)
+    found = jnp.sum(res.scores > -jnp.inf).astype(jnp.int32)
+    return DRResult(jnp.where(res.scores > -jnp.inf, res.docs, -1),
+                    res.scores, found, iters)

@@ -1,0 +1,299 @@
+"""Frontier-batched (beam) search cores: exactness and work-metric pins.
+
+Three layers of evidence (DESIGN.md §6):
+
+* ``beam_width=1`` is **bitwise identical** to the pre-beam one-pop cores —
+  docs, scores, emission order, pop counts — against the verbatim anchors in
+  ``tests/anchor_ranked.py``;
+* ``beam_width>1`` matches the brute-force NumPy oracle on 300+ seeded
+  randomized queries across AND/OR × tf-idf/BM25 × DR/DRB (the sharded
+  backend is pinned by the slow subprocess test below);
+* the while-loop trip count — the latency-chain work metric — drops with P
+  while the pop overhead stays modest, and heap overflow is surfaced, never
+  silent.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import anchor_ranked as anchor
+import oracle
+
+from repro.core import drb, ranked, scoring
+from repro.engine import EngineConfig, SearchEngine
+
+BEAMS = (3, 8, 16)
+
+
+def query_pool(idx, rng, q):
+    df = np.asarray(idx.df)
+    pool = np.flatnonzero((df >= 2) & (df <= int(idx.n_docs) // 2))
+    return rng.choice(pool, size=q, replace=False)
+
+
+# ---------------------------------------------------------------------------
+# beam_width=1 == the pre-beam implementations, exactly
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("conjunctive", [True, False])
+def test_beam1_is_bitwise_identical_to_onepop_dr(small_index, tfidf,
+                                                 conjunctive):
+    idx, _ = small_index
+    idf = tfidf.idf(idx)
+    cap = 2 * int(idx.n_docs) + 4
+    rng = np.random.default_rng(23)
+    for trial in range(4):
+        words = jnp.asarray(query_pool(idx, rng, 3), jnp.int32)
+        wmask = jnp.asarray([True, True, trial % 2 == 0])
+        for max_pops in (None, 9):
+            a = anchor.topk_dr_onepop(idx, words, wmask, idf, k=10,
+                                      conjunctive=conjunctive, heap_cap=cap,
+                                      max_pops=max_pops)
+            b = ranked.topk_dr(idx, words, wmask, idf, k=10,
+                               conjunctive=conjunctive, heap_cap=cap,
+                               max_pops=max_pops, beam_width=1)
+            np.testing.assert_array_equal(np.asarray(a.docs), np.asarray(b.docs))
+            np.testing.assert_array_equal(np.asarray(a.scores),
+                                          np.asarray(b.scores))
+            assert int(a.n_found) == int(b.n_found)
+            assert int(a.iters) == int(b.iters) == int(b.pops)
+
+
+@pytest.mark.parametrize("measure_name", ["tfidf", "bm25"])
+def test_beam1_is_bitwise_identical_to_onestep_drb(small_index, small_aux,
+                                                   measure_name):
+    idx, _ = small_index
+    m = {"tfidf": scoring.TfIdf(), "bm25": scoring.BM25()}[measure_name]
+    rng = np.random.default_rng(29)
+    for trial in range(4):
+        words = jnp.asarray(query_pool(idx, rng, 3), jnp.int32)
+        wmask = jnp.ones(3, bool)
+        a = anchor.topk_drb_and_onestep(idx, small_aux, words, wmask, m, k=10)
+        b = drb.topk_drb_and(idx, small_aux, words, wmask, m, k=10,
+                             beam_width=1)
+        np.testing.assert_array_equal(np.asarray(a.docs), np.asarray(b.docs))
+        np.testing.assert_array_equal(np.asarray(a.scores), np.asarray(b.scores))
+        assert int(a.iters) == int(b.iters)
+
+
+# ---------------------------------------------------------------------------
+# beam_width>1 == brute-force oracle (the >=200-seeded-query acceptance gate)
+# ---------------------------------------------------------------------------
+
+def make_docs(rng, n_docs, max_len, vocab, min_len=3):
+    return [rng.integers(1, vocab, size=int(rng.integers(min_len, max_len + 1))
+                         ).astype(np.int64) for _ in range(n_docs)]
+
+
+@pytest.fixture(scope="module")
+def beam_engine():
+    rng = np.random.default_rng(41)
+    docs = make_docs(rng, 30, 20, 50)
+    engine = SearchEngine.build(docs, EngineConfig(block=128), vocab_size=50)
+    return rng, docs, engine
+
+
+def test_beam_matches_oracle_300_cases(beam_engine):
+    """DR/DRB × and/or × tfidf/bm25 at P in {3, 8}: engine == oracle."""
+    rng, docs, engine = beam_engine
+    B = 18
+    queries = np.stack([
+        np.concatenate([rng.choice(np.arange(1, 50), 1),
+                        rng.integers(1, 50, 1)])
+        for _ in range(B)])
+    combos = [("and", "dr", "tfidf"), ("or", "dr", "tfidf"),
+              ("and", "drb", "tfidf"), ("or", "drb", "tfidf"),
+              ("and", "drb", "bm25"), ("or", "drb", "bm25")]
+    cases = 0
+    for P in (3, 8):
+        for mode, strategy, measure in combos:
+            res = engine.search(queries, k=len(docs), mode=mode,
+                                strategy=strategy, measure=measure,
+                                beam_width=P)
+            assert not bool(np.any(res.diagnostics.get("overflowed", False)))
+            for b in range(B):
+                exp = oracle.search_oracle(docs, queries[b], mode=mode,
+                                           measure=measure, strategy=strategy,
+                                           vocab_size=50)
+                got = dict(res.hits(b))
+                assert set(got) == set(exp), (mode, strategy, measure, P,
+                                              queries[b].tolist())
+                for d, s in got.items():
+                    np.testing.assert_allclose(s, exp[d]["score"], rtol=2e-5,
+                                               atol=1e-4)
+                cases += 1
+    assert cases >= 200, cases
+
+
+def test_beam_emission_order_descending(small_index, tfidf):
+    """Emitted scores stay globally sorted for every beam width."""
+    idx, _ = small_index
+    idf = tfidf.idf(idx)
+    cap = 2 * int(idx.n_docs) + 4
+    rng = np.random.default_rng(31)
+    words = jnp.asarray(query_pool(idx, rng, 2), jnp.int32)
+    for P in BEAMS:
+        r = ranked.topk_dr(idx, words, jnp.ones(2, bool), idf, k=15,
+                           conjunctive=False, heap_cap=cap, beam_width=P)
+        s = np.asarray(r.scores)[: int(r.n_found)]
+        assert (np.diff(s) <= 1e-5).all(), P
+
+
+def test_beam_anytime_budget_prefix(small_index, tfidf):
+    """max_pops with a beam still returns an exactly-ranked prefix."""
+    idx, _ = small_index
+    idf = tfidf.idf(idx)
+    cap = 2 * int(idx.n_docs) + 4
+    rng = np.random.default_rng(37)
+    words = jnp.asarray(query_pool(idx, rng, 2), jnp.int32)
+    wmask = jnp.ones(2, bool)
+    full = ranked.topk_dr(idx, words, wmask, idf, k=10, conjunctive=False,
+                          heap_cap=cap, beam_width=4)
+    budget = ranked.topk_dr(idx, words, wmask, idf, k=10, conjunctive=False,
+                            heap_cap=cap, beam_width=4,
+                            max_pops=int(full.pops) // 2)
+    nb = int(budget.n_found)
+    assert nb <= int(full.n_found)
+    np.testing.assert_allclose(np.asarray(budget.scores)[:nb],
+                               np.asarray(full.scores)[:nb], atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# work metric: trip count drops ~P-fold, pop overhead stays modest
+# ---------------------------------------------------------------------------
+
+def test_beam_cuts_loop_trips(small_index, tfidf):
+    idx, _ = small_index
+    idf = tfidf.idf(idx)
+    cap = 2 * int(idx.n_docs) + 4
+    rng = np.random.default_rng(43)
+    it1 = it16 = p1 = p16 = 0
+    for _ in range(3):
+        words = jnp.asarray(query_pool(idx, rng, 3), jnp.int32)
+        wmask = jnp.ones(3, bool)
+        r1 = ranked.topk_dr(idx, words, wmask, idf, k=10, conjunctive=False,
+                            heap_cap=cap, beam_width=1)
+        r16 = ranked.topk_dr(idx, words, wmask, idf, k=10, conjunctive=False,
+                             heap_cap=cap, beam_width=16)
+        it1 += int(r1.iters); it16 += int(r16.iters)
+        p1 += int(r1.pops); p16 += int(r16.pops)
+    assert it16 * 4 <= it1, (it1, it16)          # >= 4x fewer loop trips
+    assert p16 <= 3 * p1, (p1, p16)              # bounded expansion overhead
+
+
+# ---------------------------------------------------------------------------
+# heap overflow: flagged, never silent
+# ---------------------------------------------------------------------------
+
+def test_heap_overflow_is_flagged(small_index, tfidf):
+    idx, _ = small_index
+    idf = tfidf.idf(idx)
+    rng = np.random.default_rng(47)
+    words = jnp.asarray(query_pool(idx, rng, 2), jnp.int32)
+    wmask = jnp.ones(2, bool)
+    ok = ranked.topk_dr(idx, words, wmask, idf, k=10, conjunctive=False,
+                        heap_cap=2 * int(idx.n_docs) + 4, beam_width=1)
+    assert not bool(ok.overflowed)
+    for P in (1, 4):
+        tiny = ranked.topk_dr(idx, words, wmask, idf, k=10, conjunctive=False,
+                              heap_cap=3, beam_width=P)
+        assert bool(tiny.overflowed), P
+
+
+def test_engine_surfaces_overflow_diagnostics():
+    rng = np.random.default_rng(53)
+    docs = make_docs(rng, 24, 14, 40)
+    engine = SearchEngine.build(docs, EngineConfig(block=128), vocab_size=40)
+    res = engine.search([[3, 7]], k=5, mode="or", strategy="dr")
+    d = res.diagnostics
+    assert d["beam_width"] == 1
+    assert not bool(np.any(d["overflowed"]))
+    assert d["pops"].shape == d["work"].shape
+    # deliberately tiny heap: the engine must report, not corrupt silently
+    tiny = SearchEngine.build(docs, EngineConfig(block=128), vocab_size=40)
+    tiny._heap_cap = 2
+    res = tiny.search([[3, 7]], k=5, mode="or", strategy="dr")
+    assert bool(np.any(res.diagnostics["overflowed"]))
+
+
+def test_beam_executor_cache_no_retrace():
+    """Same beam_width reuses the compiled executor; a new width compiles."""
+    rng = np.random.default_rng(59)
+    docs = make_docs(rng, 20, 12, 40)
+    engine = SearchEngine.build(docs, EngineConfig(block=128), vocab_size=40)
+    q = [[4, 9]]
+    engine.search(q, k=5, mode="or", strategy="dr", beam_width=4)
+    n_exec = engine.stats["executors"]
+    traces = dict(engine.stats["traces"])
+    engine.search(q, k=5, mode="or", strategy="dr", beam_width=4)
+    assert engine.stats["executors"] == n_exec
+    assert engine.stats["traces"] == traces
+    engine.search(q, k=5, mode="or", strategy="dr", beam_width=8)
+    assert engine.stats["executors"] == n_exec + 1
+
+
+def test_beam_width_validation():
+    rng = np.random.default_rng(61)
+    docs = make_docs(rng, 10, 10, 30)
+    engine = SearchEngine.build(docs, EngineConfig(block=128), vocab_size=30)
+    with pytest.raises(ValueError, match="beam_width"):
+        engine.search([[3]], k=3, beam_width=0)
+    with pytest.raises(ValueError, match="beam_width"):
+        engine.search([[3, 4]], mode="phrase", beam_width=2)
+    with pytest.raises(ValueError, match="default_beam_width"):
+        EngineConfig(default_beam_width=0)
+
+
+# ---------------------------------------------------------------------------
+# sharded backend (slow: subprocess with simulated devices)
+# ---------------------------------------------------------------------------
+
+SHARD_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    import numpy as np, jax
+    from repro.engine import EngineConfig, SearchEngine
+    from repro.text import corpus
+
+    cp = corpus.make_corpus(n_docs=64, mean_doc_len=30, vocab_size=200, seed=7)
+    single = SearchEngine.build(cp)
+    sharded = SearchEngine.shard(cp, n_shards=4)
+    df = cp.doc_freqs()
+    pool = np.flatnonzero((df >= 2) & (df <= 32))
+    rng = np.random.default_rng(3)
+    qs = np.stack([rng.choice(pool, 2, replace=False) for _ in range(4)])
+    fails = 0
+    for mode, strategy, measure in (("and", "dr", "tfidf"),
+                                    ("or", "dr", "tfidf"),
+                                    ("and", "drb", "bm25")):
+        ref = single.search(qs, k=10, mode=mode, strategy=strategy,
+                            measure=measure, beam_width=1)
+        for P in (1, 4):
+            res = sharded.search(qs, k=10, mode=mode, strategy=strategy,
+                                 measure=measure, beam_width=P)
+            for b in range(len(qs)):
+                a = np.sort(np.asarray(ref.scores[b]))[::-1]
+                g = np.sort(np.asarray(res.scores[b]))[::-1]
+                if not (np.allclose(a, g, atol=1e-4)
+                        and int(ref.n_found[b]) == int(res.n_found[b])):
+                    fails += 1
+                    print("MISMATCH", mode, strategy, measure, P, b)
+    print("FAILS", fails)
+    raise SystemExit(1 if fails else 0)
+""")
+
+
+@pytest.mark.slow
+def test_sharded_beam_matches_single(tmp_path):
+    env = dict(os.environ)
+    src = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "src")
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    r = subprocess.run([sys.executable, "-c", SHARD_SCRIPT], env=env,
+                       capture_output=True, text=True, timeout=1200)
+    assert r.returncode == 0, r.stdout + r.stderr

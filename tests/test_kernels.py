@@ -82,6 +82,119 @@ def test_kernel_disable_switch(small_index):
     np.testing.assert_array_equal(a, b)
 
 
+# ---------------------------------------------------------------------------
+# randomized kernel/oracle A/B parity at edge positions (0, length, block
+# boundaries) — use_kernels(True) interpret-mode vs use_kernels(False)
+# ---------------------------------------------------------------------------
+
+def edge_positions(rng, n, block, m):
+    """Query positions biased to the rank/select edge cases."""
+    pos = rng.integers(0, n + 1, m)
+    edges = np.array([0, 1, n - 1, n, block - 1, block, block + 1,
+                      2 * block, n - block], dtype=np.int64)
+    pos[: len(edges)] = np.clip(edges, 0, n)
+    return pos
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_ab_parity_byte_rank(seed):
+    rng = np.random.default_rng(100 + seed)
+    n, block = int(rng.integers(700, 6000)), 512
+    data = rng.integers(0, 12, n).astype(np.uint8)
+    bm = bytemap.build(data, block=block)
+    bq = jnp.asarray(rng.integers(0, 12, 24), jnp.int32)
+    pq = jnp.asarray(edge_positions(rng, n, block, 24), jnp.int32)
+    with ops.use_kernels(True):
+        a = np.asarray(ops.rank_batch(bm, bq, pq))
+    with ops.use_kernels(False):
+        b = np.asarray(ops.rank_batch(bm, bq, pq))
+    np.testing.assert_array_equal(a, b)
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_ab_parity_bitmap_rank(seed):
+    rng = np.random.default_rng(200 + seed)
+    n_bits = int(rng.integers(300, 9000))
+    set_bits = np.unique(rng.integers(0, n_bits, max(1, n_bits // 4)))
+    bv = bitvec.build(set_bits, n_bits)
+    block_bits = bitvec.WORDS_PER_BLOCK * 32
+    pq = jnp.asarray(edge_positions(rng, n_bits, block_bits, 24), jnp.int32)
+    with ops.use_kernels(True):
+        a = np.asarray(ops.bitmap_rank1_batch(bv, pq))
+    with ops.use_kernels(False):
+        b = np.asarray(ops.bitmap_rank1_batch(bv, pq))
+    np.testing.assert_array_equal(a, b)
+
+
+@pytest.mark.parametrize("seed", [0, 1])
+def test_ab_parity_topk_score(seed):
+    rng = np.random.default_rng(300 + seed)
+    C = int(rng.integers(900, 2500))
+    cands = rng.standard_normal((C, 128)).astype(np.float32)
+    q = rng.standard_normal(128).astype(np.float32)
+    with ops.use_kernels(True):
+        s_a, i_a = ops.scored_topk(jnp.asarray(cands), jnp.asarray(q), k=8,
+                                   tile=512)
+    with ops.use_kernels(False):
+        s_b, i_b = ops.scored_topk(jnp.asarray(cands), jnp.asarray(q), k=8)
+    np.testing.assert_allclose(np.asarray(s_a), np.asarray(s_b), rtol=2e-5,
+                               atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(i_a), np.asarray(i_b))
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_ab_parity_wavelet_descent(small_index, seed):
+    """Fused descent kernel (interpret) == batched oracle == scalar walk,
+    including lo/hi at 0, n, and counter-block boundaries."""
+    from repro.core import wtbc
+    from repro.kernels import wavelet_descent as wd
+
+    idx, _ = small_index
+    block = idx.levels[0].block
+    n = int(idx.n)
+    rng = np.random.default_rng(400 + seed)
+    M = 32
+    words = jnp.asarray(rng.integers(1, idx.vocab_size, M), jnp.int32)
+    a = edge_positions(rng, n, block, M)
+    b = edge_positions(rng, n, block, M)[::-1].copy()
+    lo = jnp.asarray(np.minimum(a, b), jnp.int32)
+    hi = jnp.asarray(np.maximum(a, b), jnp.int32)
+    kern = np.asarray(wd.wavelet_descent(
+        idx.levels, idx.cw, idx.cw_len, idx.node_off, idx.base_rank,
+        words, lo, hi, block=block, interpret=True))
+    orac = np.asarray(ref.wavelet_count_ref(
+        idx.levels, idx.cw, idx.cw_len, idx.node_off, idx.base_rank,
+        words, lo, hi))
+    scalar = np.array([int(wtbc.count_range(idx, words[i], lo[i], hi[i]))
+                       for i in range(M)])
+    np.testing.assert_array_equal(kern, orac)
+    np.testing.assert_array_equal(kern, scalar)
+
+
+def test_wavelet_dispatch_wiring(small_index, monkeypatch):
+    """The TPU branch of ops.wavelet_count_batch passes the index tables in
+    the kernel's argument order (on CPU that branch otherwise never runs)."""
+    from repro.core import wtbc
+    from repro.kernels import wavelet_descent as wd
+
+    idx, _ = small_index
+    rng = np.random.default_rng(7)
+    words = jnp.asarray(rng.integers(1, idx.vocab_size, 9), jnp.int32)
+    lo = jnp.zeros(9, jnp.int32)
+    hi = jnp.asarray(rng.integers(0, int(idx.n) + 1, 9), jnp.int32)
+    want = np.asarray(ref.wavelet_count_ref(
+        idx.levels, idx.cw, idx.cw_len, idx.node_off, idx.base_rank,
+        words, lo, hi))
+
+    real = wd.wavelet_descent
+    monkeypatch.setattr(ops, "_on_tpu", lambda: True)
+    monkeypatch.setattr(
+        ops._wavelet_descent_k, "wavelet_descent",
+        lambda *a, **kw: real(*a, **{**kw, "interpret": True}))
+    got = np.asarray(wtbc.count_range_batch(idx, words, lo, hi))
+    np.testing.assert_array_equal(got, want)
+
+
 def test_segment_tf_kernel():
     rng = np.random.default_rng(5)
     data = rng.integers(0, 16, 20000).astype(np.uint8)
