@@ -5,14 +5,19 @@
 
 Prints ``name,us_per_call,derived`` CSV rows (the harness contract).
 ``--json PATH`` additionally writes the rows as a machine-readable artifact
-(``{"bench": {name: us_per_call}, "beam_sweep": {...}}`` — the BENCH_PR3.json
-CI artifact that seeds the perf trajectory; the beam sweep entries carry
-iters/pops and their ratios vs P=1).
+(``{"bench": {name: us_per_call}, "beam_sweep": {...}, "serving": {...}}`` —
+the BENCH_PR4.json artifact that carries the perf trajectory; beam-sweep
+entries hold iters/pops ratios vs P=1, serving entries the table 6
+throughput/percentile/cache metrics).  The artifact is also mirrored into
+``artifacts/`` so the committed trajectory and the CI upload stay in one
+place.
 """
 from __future__ import annotations
 
 import argparse
 import json
+import pathlib
+import shutil
 import sys
 import time
 
@@ -31,7 +36,7 @@ def main() -> None:
 
     from benchmarks import (common, distributed_scaling, table1_compression,
                             table2_conjunctive, table3_bagofwords,
-                            table4_positional, table5_beam)
+                            table4_positional, table5_beam, table6_serving)
 
     rows: dict[str, float] = {}
 
@@ -75,6 +80,7 @@ def main() -> None:
 
     beam = table5_beam.run(bench, print_rows=collect,
                            with_sharded=not args.skip_distributed)
+    serving = table6_serving.run(bench, print_rows=collect)
 
     if not args.skip_distributed:
         distributed_scaling.run(print_rows=collect)
@@ -93,10 +99,16 @@ def main() -> None:
 
     if args.json:
         with open(args.json, "w") as f:
-            json.dump({"bench": rows, "beam_sweep": beam,
+            json.dump({"bench": rows, "beam_sweep": beam, "serving": serving,
                        "config": {"docs": args.docs, "full": args.full}},
                       f, indent=2, sort_keys=True)
         print(f"# wrote {args.json}", file=sys.stderr)
+        mirror = pathlib.Path(__file__).resolve().parent.parent / "artifacts"
+        mirror.mkdir(exist_ok=True)
+        target = mirror / pathlib.Path(args.json).name
+        if target.resolve() != pathlib.Path(args.json).resolve():
+            shutil.copy2(args.json, target)
+            print(f"# mirrored to {target}", file=sys.stderr)
 
     print(f"# total {time.time()-t0:.1f}s", file=sys.stderr)
 

@@ -35,8 +35,20 @@ def _flatten_with_names(tree) -> list[tuple[str, Any]]:
     return [(jax.tree_util.keystr(path), leaf) for path, leaf in flat]
 
 
-def save(ckpt_dir: str | pathlib.Path, step: int, tree) -> pathlib.Path:
-    """Synchronous crash-safe save of a pytree."""
+def save(ckpt_dir: str | pathlib.Path, step: int, tree, *, fmt: str = "npz",
+         meta: dict | None = None) -> pathlib.Path:
+    """Synchronous crash-safe save of a pytree.
+
+    fmt:  "npz" packs every leaf into one zipped archive (training default);
+          "npy" writes one raw ``.npy`` per leaf, which ``restore`` can then
+          memory-map — the zero-copy load path the serving snapshots use
+          (a zip archive cannot be mmapped member-wise).
+    meta: JSON-serializable caller metadata committed atomically with the
+          arrays (``read_manifest`` returns it) — e.g. the serving snapshot's
+          engine config + structural layout.
+    """
+    if fmt not in ("npz", "npy"):
+        raise ValueError(f"unknown checkpoint format {fmt!r}")
     ckpt_dir = pathlib.Path(ckpt_dir)
     final = ckpt_dir / f"step_{step:08d}"
     tmp = ckpt_dir / f"step_{step:08d}.tmp"
@@ -44,15 +56,22 @@ def save(ckpt_dir: str | pathlib.Path, step: int, tree) -> pathlib.Path:
 
     named = _flatten_with_names(tree)
     arrays = {f"leaf_{i}": np.asarray(l) for i, (_, l) in enumerate(named)}
-    np.savez(tmp / "shard_00000.npz", **arrays)
+    if fmt == "npz":
+        np.savez(tmp / "shard_00000.npz", **arrays)
+    else:
+        for key, arr in arrays.items():
+            np.save(tmp / f"{key}.npy", arr)
     manifest = {
         "step": step,
-        "leaves": [{"name": n, "key": f"leaf_{i}",
-                    "shape": list(np.asarray(l).shape),
-                    "dtype": str(np.asarray(l).dtype),
-                    "crc32": zlib.crc32(np.ascontiguousarray(np.asarray(l)).tobytes())}
-                   for i, (n, l) in enumerate(named)],
+        "format": fmt,
+        "leaves": [{"name": n, "key": key,
+                    "shape": list(arrays[key].shape),
+                    "dtype": str(arrays[key].dtype),
+                    "crc32": zlib.crc32(
+                        np.ascontiguousarray(arrays[key]).tobytes())}
+                   for (n, _), key in zip(named, arrays)],
         "n_shards": 1,
+        "user_meta": meta or {},
     }
     mpath = tmp / "MANIFEST.json"
     mpath.write_text(json.dumps(manifest, indent=1))
@@ -106,28 +125,51 @@ def list_steps(ckpt_dir: str | pathlib.Path) -> list[int]:
     return sorted(out)
 
 
-def restore(ckpt_dir: str | pathlib.Path, tree_like, step: int | None = None,
-            shardings=None, verify_crc: bool = True):
-    """Restore into the structure of ``tree_like``; optionally re-shard.
-
-    ``shardings``: optional pytree of jax.sharding.Sharding — the elastic
-    path: arrays are placed for the *current* mesh regardless of the mesh
-    that wrote them.
-    """
+def read_manifest(ckpt_dir: str | pathlib.Path,
+                  step: int | None = None) -> tuple[dict, int]:
+    """The committed manifest (+ resolved step) without loading any arrays —
+    snapshot loaders read the structural ``user_meta`` first to build the
+    skeleton pytree ``restore`` fills in."""
     steps = list_steps(ckpt_dir)
     if not steps:
         raise FileNotFoundError(f"no committed checkpoints under {ckpt_dir}")
     step = steps[-1] if step is None else step
     d = pathlib.Path(ckpt_dir) / f"step_{step:08d}"
-    manifest = json.loads((d / "MANIFEST.json").read_text())
-    data = np.load(d / "shard_00000.npz")
+    return json.loads((d / "MANIFEST.json").read_text()), step
+
+
+def restore(ckpt_dir: str | pathlib.Path, tree_like, step: int | None = None,
+            shardings=None, verify_crc: bool = True, mmap: bool = False):
+    """Restore into the structure of ``tree_like``; optionally re-shard.
+
+    ``shardings``: optional pytree of jax.sharding.Sharding — the elastic
+    path: arrays are placed for the *current* mesh regardless of the mesh
+    that wrote them.
+    ``mmap``: memory-map leaves instead of reading them (``fmt="npy"``
+    checkpoints only) — the returned arrays alias the files, so nothing is
+    copied until a consumer touches (or device-puts) the pages.  Combine
+    with ``verify_crc=False`` for a truly lazy load: CRC verification must
+    fault in every page.
+    """
+    manifest, step = read_manifest(ckpt_dir, step)
+    d = pathlib.Path(ckpt_dir) / f"step_{step:08d}"
+    fmt = manifest.get("format", "npz")
+    if mmap and fmt != "npy":
+        raise ValueError(f"mmap restore needs an fmt='npy' checkpoint, "
+                         f"found {fmt!r}")
+    if fmt == "npz":
+        data = np.load(d / "shard_00000.npz")
+        fetch = lambda key: data[key]
+    else:
+        fetch = lambda key: np.load(d / f"{key}.npy",
+                                    mmap_mode="r" if mmap else None)
 
     names = [n for n, _ in _flatten_with_names(tree_like)]
     by_name = {l["name"]: l for l in manifest["leaves"]}
     leaves = []
     for n in names:
         meta = by_name[n]
-        arr = data[meta["key"]]
+        arr = fetch(meta["key"])
         if verify_crc:
             crc = zlib.crc32(np.ascontiguousarray(arr).tobytes())
             if crc != meta["crc32"]:

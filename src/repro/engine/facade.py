@@ -38,6 +38,14 @@ STRATEGIES = ("dr", "drb", "auto")
 MEASURES = {"tfidf": scoring.TfIdf(), "bm25": scoring.BM25()}
 
 
+def pow2_bucket(n: int) -> int:
+    """Smallest power of two >= n (n >= 1) — the shared shape-bucket policy:
+    executor keys quantize the query-word dim Q (and the serving batcher the
+    batch dim B) to these buckets, so mixed traffic reuses a small fixed set
+    of compiled programs instead of one program per exact shape."""
+    return 1 << max(0, int(n) - 1).bit_length()
+
+
 def _normalize_docs(docs, vocab_size: int | None):
     """Accept a corpus object (``.doc_tokens`` / ``.vocab_size``) or a plain
     list of per-document word-id arrays; return (list[np.ndarray], vocab_size).
@@ -146,6 +154,18 @@ class SearchEngine:
                    n_docs=len(doc_tokens), backend="sharded", sharded=sharded,
                    mesh=mesh, shard_axes=shard_axes)
 
+    @classmethod
+    def _restore(cls, *, config, model, n_docs, backend, idx=None, aux=None,
+                 sharded=None, mesh=None, shard_axes=None) -> "SearchEngine":
+        """Reassemble an engine from snapshot parts (``repro.serve.snapshot``)
+        — no corpus, no rebuild; the restored arrays ARE the engine."""
+        self = cls(_token=_CTOR_TOKEN, config=config, model=model,
+                   n_docs=n_docs, backend=backend, idx=idx, doc_tokens=None,
+                   sharded=sharded, mesh=mesh, shard_axes=shard_axes)
+        if aux is not None:
+            self._aux = aux
+        return self
+
     # -- lazily-derived state ------------------------------------------------
 
     @property
@@ -162,6 +182,10 @@ class SearchEngine:
             if not self.config.with_drb:
                 raise ValueError("this engine was built with with_drb=False; "
                                  "DRB (and BM25) queries are unavailable")
+            if self._doc_tokens is None:
+                raise ValueError("DRB bitmaps unavailable: this engine was "
+                                 "restored without them (snapshot.save builds "
+                                 "them first when config.with_drb)")
             self._aux = drb.build_aux(self._idx, self.model, self._doc_tokens,
                                       eps=self.config.eps)
             self._doc_tokens = None     # raw tokens no longer needed
@@ -192,7 +216,14 @@ class SearchEngine:
 
     def _encode_queries(self, queries) -> tuple[jnp.ndarray, jnp.ndarray]:
         """Word ids (array or ragged lists) -> padded (B, Q) frequency ranks
-        + validity mask.  A single flat query becomes a batch of one."""
+        + validity mask.  A single flat query becomes a batch of one.
+
+        Q is padded up to a power-of-two bucket (extra columns masked out), so
+        batches whose longest query differs only within a bucket share one
+        compiled executor — the serving batcher coalesces mixed-length traffic
+        relying on exactly this.  Masked columns are ignored by every backend
+        (the invariant ragged queries already depend on), so bucketing never
+        changes results."""
         if hasattr(queries, "ndim") or (
                 len(queries) and np.isscalar(queries[0])):
             arr = np.asarray(queries, dtype=np.int64)
@@ -219,6 +250,10 @@ class SearchEngine:
         if bad.any():
             raise ValueError(f"query word ids must be in [1, {V}); offending "
                              f"ids: {sorted(set(arr[bad].tolist()))[:10]}")
+        Qb = pow2_bucket(arr.shape[1])
+        if Qb != arr.shape[1]:
+            arr = np.pad(arr, ((0, 0), (0, Qb - arr.shape[1])))
+            mask = np.pad(mask, ((0, 0), (0, Qb - mask.shape[1])))
         ranks = np.where(mask, self.model.rank_of_word[arr], 0)
         return ranks.astype(np.int32), mask
 
@@ -293,11 +328,59 @@ class SearchEngine:
             self._executors[key] = ex
         return ex
 
+    def suggested_df_cap(self, queries) -> int:
+        """The DRB/OR gather width ``search`` would derive for ``queries`` —
+        pass it back as ``search(..., df_cap=...)`` (or into a serving
+        profile) to pin every batch drawn from the same word population onto
+        one compiled executor regardless of which words each batch mixes."""
+        ranks, mask = self._encode_queries(queries)
+        return self._df_cap(ranks, mask)
+
+    def warmup(self, queries, *, max_batch: int = 1, k: int | None = None,
+               mode: str = "and", strategy: str = "auto", measure="tfidf",
+               budget: int | None = None, window: int | None = None,
+               beam_width: int | None = None,
+               df_cap: int | None = None) -> int:
+        """Compile every executor the given traffic profile can hit before
+        admitting traffic: one program per (batch bucket <= pow2(max_batch),
+        Q bucket present in ``queries``).  Runs one real (tiny) search per
+        shape, so after ``warmup`` steady-state traffic of this profile never
+        retraces (``stats['traces']`` is the proof).  Returns the number of
+        newly compiled executors.
+
+        For ``strategy='drb', mode='or'`` pass an explicit ``df_cap``
+        (e.g. :meth:`suggested_df_cap` of the serving word population) —
+        otherwise the gather width is re-derived per batch and a heavier
+        batch than any warmed one would still compile on the fly.
+        """
+        if max_batch < 1:
+            raise ValueError(f"max_batch must be >= 1, got {max_batch}")
+        if hasattr(queries, "ndim") or (
+                len(queries) and np.isscalar(queries[0])):
+            arr = np.asarray(queries)
+            rows = list(arr[None, :] if arr.ndim == 1 else arr)
+        else:
+            rows = [np.asarray(q).reshape(-1) for q in queries]
+        reps = {}                       # Q bucket -> one representative row
+        for r in rows:
+            reps.setdefault(pow2_bucket(max(1, len(r))), r)
+        before = sum(self._trace_counts.values())
+        kw = dict(k=k, mode=mode, strategy=strategy, measure=measure,
+                  budget=budget, window=window, beam_width=beam_width,
+                  df_cap=df_cap)
+        n_b = pow2_bucket(max_batch).bit_length()     # 1, 2, 4, ..., bucket
+        for r in reps.values():
+            row = [int(w) for w in r]
+            for bb in (1 << i for i in range(n_b)):
+                self.search([row] * bb, **kw)
+        return sum(self._trace_counts.values()) - before
+
     def search(self, queries, *, k: int | None = None, mode: str = "and",
                strategy: str = "auto", measure="tfidf",
                budget: int | None = None,
                window: int | None = None,
-               beam_width: int | None = None) -> SearchResults:
+               beam_width: int | None = None,
+               df_cap: int | None = None) -> SearchResults:
         """Ranked top-k retrieval.
 
         queries:  (B, Q) / (Q,) array of word ids, or ragged lists of ids.
@@ -324,6 +407,15 @@ class SearchEngine:
                   each distinct P compiles once and is cached.  Ignored
                   (normalized to 1) by the loop-free DRB/OR path; not
                   applicable to phrase/near.
+        df_cap:   explicit DRB/OR gather width (static, pow2-bucketed and
+                  clamped to the engine max).  By default the width is
+                  derived from the batch's heaviest word, which makes the
+                  executor key content-dependent — mixed traffic then
+                  compiles one program per df bucket it happens to hit.
+                  Serving pins this with :meth:`suggested_df_cap` so all
+                  traffic shares one program.  Exactness-guarded: a cap
+                  smaller than the batch actually needs raises instead of
+                  silently truncating the gather.  DRB/OR only.
         """
         k = self.config.default_k if k is None else int(k)
         if k <= 0:
@@ -356,8 +448,21 @@ class SearchEngine:
         if mode in POSITIONAL_MODES or (strat == "drb" and mode == "or"):
             beam_width = 1          # no search loop: don't split the executor
         ranks, mask = self._encode_queries(queries)
-        df_cap = (self._df_cap(ranks, mask)
-                  if strat == "drb" and mode == "or" else None)
+        if strat == "drb" and mode == "or":
+            auto_cap = self._df_cap(ranks, mask)
+            if df_cap is None:
+                df_cap = auto_cap
+            else:
+                df_cap = min(pow2_bucket(int(df_cap)), self._max_df_cap)
+                if df_cap < auto_cap:
+                    raise ValueError(
+                        f"df_cap={df_cap} is smaller than the {auto_cap} this "
+                        "batch's heaviest word needs — the gather would "
+                        "silently truncate; pass a cap derived from "
+                        "suggested_df_cap over the full word population")
+        elif df_cap is not None:
+            raise ValueError("df_cap applies to the DRB/OR gather path only "
+                             f"(got strategy={strat!r}, mode={mode!r})")
         key = executors.ExecutorKey(self.backend, strat, mode, m, k,
                                     tuple(ranks.shape), budget, df_cap,
                                     beam_width)

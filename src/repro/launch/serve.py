@@ -1,96 +1,175 @@
-"""Serving launcher — the paper's system end-to-end, through `repro.engine`.
+"""Serving launcher — a thin CLI over the ``repro.serve`` subsystem.
 
-Builds a :class:`repro.engine.SearchEngine` over a synthetic corpus (single
-index or document-sharded over a local mesh) and serves batched ranked
-queries — DR / DRB / auto routing, AND / OR / phrase / near, tf-idf / BM25 —
-with latency stats.  All query glue (rank mapping, masking, heap/df caps, jit
-executor caching) lives behind ``engine.search``:
+Starts a :class:`repro.serve.SearchServer` from a **snapshot** when one
+exists (the paper's premise: the compressed index is the only thing we
+keep), else builds from a synthetic corpus (optionally persisting the
+snapshot for next boot), prints the index space report, precompiles every
+executor bucket, then drives load and reports latency percentiles:
 
-  PYTHONPATH=src python -m repro.launch.serve --docs 2000 --queries 100 \
-      --strategy dr --mode or --k 10
-  PYTHONPATH=src python -m repro.launch.serve --mode near --window 6
+  # build once, snapshot, serve 2000 closed-loop requests
+  PYTHONPATH=src python -m repro.launch.serve --docs 2000 \
+      --snapshot-dir /tmp/wtbc-snap --save-snapshot --requests 2000
+
+  # next boot: no corpus, no build — straight from the snapshot
+  PYTHONPATH=src python -m repro.launch.serve --snapshot-dir /tmp/wtbc-snap \
+      --target-qps 200 --requests 500 --mode or --strategy drb --measure bm25
+
+``--target-qps 0`` (default) runs the closed-loop shape (``--workers``
+back-to-back clients); a positive value runs the open-loop Poisson shape.
+``--smoke`` exits non-zero unless the run was healthy (finite p99, zero
+shed) — the CI serving smoke job drives exactly this.
 """
 from __future__ import annotations
 
 import argparse
-import time
+import sys
 
-import jax
 import numpy as np
 
 from repro.engine import SearchEngine
+from repro.engine.facade import MEASURES
+from repro.serve import QueryProfile, SearchServer, loadgen, snapshot
 from repro.text import corpus
 
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--docs", type=int, default=2000)
-    ap.add_argument("--mean-doc-len", type=int, default=300)
-    ap.add_argument("--vocab", type=int, default=20000)
-    ap.add_argument("--queries", type=int, default=50)
-    ap.add_argument("--words", type=int, default=3)
-    ap.add_argument("--k", type=int, default=10)
-    ap.add_argument("--strategy", default="auto", choices=("dr", "drb", "auto"))
-    ap.add_argument("--mode", default="or",
-                    choices=("and", "or", "phrase", "near"))
-    ap.add_argument("--measure", default="tfidf", choices=("tfidf", "bm25"))
-    ap.add_argument("--budget", type=int, default=None,
-                    help="DR any-time pop budget (straggler mitigation)")
-    ap.add_argument("--window", type=int, default=None,
-                    help="proximity width in tokens (mode=near only)")
-    ap.add_argument("--beam-width", type=int, default=None,
-                    help="frontier width P of the DR / DRB-AND search loops "
-                         "(default 1 = classical one-pop Algorithm 1)")
-    ap.add_argument("--shards", type=int, default=0,
-                    help="0 = single index; N = document-sharded over a local mesh")
-    ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args()
-
+def build_or_load(args) -> SearchEngine:
+    if args.snapshot_dir and snapshot.list_versions(args.snapshot_dir):
+        v = snapshot.list_versions(args.snapshot_dir)[-1]
+        print(f"loading snapshot v{v} from {args.snapshot_dir} ...", flush=True)
+        return snapshot.load(args.snapshot_dir)
     print(f"building corpus: {args.docs} docs ...", flush=True)
-    cp = corpus.make_corpus(args.docs, args.mean_doc_len, args.vocab, seed=args.seed)
+    cp = corpus.make_corpus(args.docs, args.mean_doc_len, args.vocab,
+                            seed=args.seed)
     if args.shards:
         engine = SearchEngine.shard(cp, n_shards=args.shards)
     else:
         engine = SearchEngine.build(cp)
+    if args.save_snapshot:
+        if not args.snapshot_dir:
+            raise SystemExit("--save-snapshot needs --snapshot-dir")
+        p = snapshot.save(engine, args.snapshot_dir)
+        print(f"snapshot committed: {p}")
+    return engine
+
+
+def print_space_report(engine: SearchEngine) -> None:
+    rep = engine.space_report()
+    text = rep["level_bytes"]
+    print("index space (bytes):")
+    for k, v in rep.items():
+        if k != "total":
+            print(f"  {k:20s} {v:12,d}  ({v / max(text, 1):6.1%} of "
+                  "compressed text)")
+    print(f"  {'total':20s} {rep['total']:12,d}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    # corpus/build (ignored when a snapshot is loaded)
+    ap.add_argument("--docs", type=int, default=2000)
+    ap.add_argument("--mean-doc-len", type=int, default=300)
+    ap.add_argument("--vocab", type=int, default=20000)
+    ap.add_argument("--shards", type=int, default=0,
+                    help="0 = single index; N = document-sharded local mesh")
+    ap.add_argument("--seed", type=int, default=0)
+    # snapshot
+    ap.add_argument("--snapshot-dir", default=None,
+                    help="load the newest snapshot here (skips the build); "
+                         "with --save-snapshot, also where builds are saved")
+    ap.add_argument("--save-snapshot", action="store_true")
+    # query profile
+    ap.add_argument("--mode", default="or",
+                    choices=("and", "or", "phrase", "near"))
+    ap.add_argument("--strategy", default="auto", choices=("dr", "drb", "auto"))
+    ap.add_argument("--measure", default="tfidf", choices=("tfidf", "bm25"))
+    ap.add_argument("--k", type=int, default=10)
+    ap.add_argument("--words", type=int, default=3, help="words per query")
+    ap.add_argument("--window", type=int, default=None)
+    ap.add_argument("--budget", type=int, default=None)
+    ap.add_argument("--beam-width", type=int, default=None)
+    # serving knobs
+    ap.add_argument("--max-batch", type=int, default=16)
+    ap.add_argument("--max-wait-ms", type=float, default=2.0)
+    ap.add_argument("--queue-depth", type=int, default=256)
+    ap.add_argument("--cache-size", type=int, default=1024)
+    # load shape
+    ap.add_argument("--requests", type=int, default=500)
+    ap.add_argument("--distinct", type=int, default=64,
+                    help="distinct queries in the (Zipf-repeated) workload")
+    ap.add_argument("--target-qps", type=float, default=0.0,
+                    help="open-loop offered load; 0 = closed loop")
+    ap.add_argument("--workers", type=int, default=8,
+                    help="closed-loop client concurrency")
+    ap.add_argument("--smoke", action="store_true",
+                    help="exit 1 unless p99 is finite and nothing was shed")
+    args = ap.parse_args()
+
+    engine = build_or_load(args)
+    print_space_report(engine)
+    if args.requests == 0:
+        print("no traffic requested (--requests 0); exiting after "
+              "build/snapshot")
+        return
 
     if args.mode in ("phrase", "near"):
-        # n-grams lifted from the documents: positional queries that exercise
-        # the matching path, not the empty one
-        queries = corpus.sample_ngram_queries(cp.doc_tokens, args.queries,
-                                              args.words, seed=args.seed)
+        # n-grams decoded from the index: positional queries that exercise
+        # the matching path, not the empty one (no corpus needed)
+        queries = loadgen.sample_ngram_queries(engine, args.distinct,
+                                               args.words, seed=args.seed)
     else:
-        df = cp.doc_freqs()
-        bands = corpus.fdoc_bands(cp.n_docs)
-        queries = corpus.sample_queries(df, bands["ii"], args.queries,
-                                        args.words, seed=args.seed)
-    run = lambda: engine.search(queries, k=args.k, mode=args.mode,
-                                strategy=args.strategy, measure=args.measure,
-                                budget=args.budget, window=args.window,
-                                beam_width=args.beam_width)
+        queries = loadgen.sample_queries(engine, args.distinct, args.words,
+                                         seed=args.seed)
+    # pin the DRB/OR gather width whenever traffic will ROUTE to drb/or —
+    # "auto" routes by the measure's own DR-compatibility, so ask the
+    # engine's measure table instead of duplicating the routing rule
+    routed_drb = args.mode == "or" and (
+        args.strategy == "drb"
+        or (args.strategy == "auto"
+            and not MEASURES[args.measure].dr_compatible))
+    profile = QueryProfile(
+        mode=args.mode, strategy=args.strategy, measure=args.measure,
+        k=args.k, window=args.window, budget=args.budget,
+        beam_width=args.beam_width,
+        df_cap=engine.suggested_df_cap(queries) if routed_drb else None)
 
-    print("compiling ...", flush=True)
-    t0 = time.time()
+    server = SearchServer(engine, max_batch=args.max_batch,
+                          max_wait_ms=args.max_wait_ms,
+                          queue_depth=args.queue_depth,
+                          cache_size=args.cache_size)
+    print("warming up (compiling executor buckets) ...", flush=True)
     try:
-        res = run()
-    except ValueError as e:          # e.g. BM25 + strategy=dr, budget + drb
+        n = server.warmup(queries, profile)
+    except ValueError as e:       # e.g. BM25 + strategy=dr, budget + drb
         raise SystemExit(f"error: {e}")
-    jax.block_until_ready(res.scores)
-    compile_s = time.time() - t0
-    t0 = time.time()
-    res = run()
-    jax.block_until_ready(res.scores)
-    serve_s = time.time() - t0
-    diag = res.diagnostics
-    work = int(np.sum(diag["work"]))
-    extra = (f" | pops {int(np.sum(diag['pops']))}" if "pops" in diag else "")
-    if bool(np.any(diag.get("overflowed", False))):
-        extra += " | WARNING: heap overflow — rankings may be incomplete"
-    print(f"compile {compile_s:.1f}s | {args.queries} queries in {serve_s*1e3:.1f}ms "
-          f"({serve_s/args.queries*1e3:.2f} ms/query) | routed to {res.strategy} "
-          f"| beam {res.beam_width} | loop trips {work}{extra}")
-    print("first query top-k docs:", np.asarray(res.docs[0])[:args.k].tolist())
-    if res.match_pos is not None:
-        print("first query matches (doc, score, pos, len):", res.matches(0))
+    traces0 = sum(engine.stats["traces"].values())
+    print(f"compiled {n} executors; admitting traffic", flush=True)
+
+    workload = loadgen.zipf_workload(queries, args.requests, seed=args.seed)
+    with server:
+        if args.target_qps > 0:
+            rep = loadgen.open_loop(server, workload,
+                                    target_qps=args.target_qps,
+                                    profile=profile, seed=args.seed)
+        else:
+            rep = loadgen.closed_loop(server, workload,
+                                      n_workers=args.workers, profile=profile)
+
+    retraces = sum(engine.stats["traces"].values()) - traces0
+    st = rep.server_stats
+    print(rep.summary())
+    print(f"batch sizes: {st['batch_hist']} (mean {st['mean_batch']:.2f}) | "
+          f"cache hit rate {st['cache']['hit_rate']:.1%} | "
+          f"retraces after warmup: {retraces}")
+    if st["overflowed"]:
+        print(f"WARNING: {st['overflowed']} responses hit heap overflow — "
+              "their rankings may be incomplete (rebuild with a larger "
+              "heap_cap or query a smaller k)")
+    if args.smoke:
+        healthy = (np.isfinite(rep.p99_ms) and rep.n_shed == 0
+                   and st["errors"] == 0 and retraces == 0
+                   and rep.n_ok == args.requests)
+        print(f"smoke: {'PASS' if healthy else 'FAIL'}")
+        sys.exit(0 if healthy else 1)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,21 @@
+"""repro.serve — the online serving subsystem over ``repro.engine``.
+
+Layers (DESIGN.md §7):
+
+    snapshot   versioned on-disk engine images; serve starts here, not from
+               the raw corpus
+    batcher    dynamic micro-batching onto power-of-two executor buckets
+    cache      exact LRU result cache
+    server     thread frontend: bounded queue -> batcher -> engine -> cache
+    loadgen    closed/open-loop traffic + latency-percentile reports
+"""
+from repro.serve import loadgen, snapshot
+from repro.serve.batcher import MicroBatcher, QueryProfile
+from repro.serve.cache import LRUCache
+from repro.serve.server import (DEFAULT_PROFILE, RowResult, SearchServer,
+                                ShedError, Ticket)
+
+__all__ = [
+    "DEFAULT_PROFILE", "LRUCache", "MicroBatcher", "QueryProfile",
+    "RowResult", "SearchServer", "ShedError", "Ticket", "loadgen", "snapshot",
+]

@@ -1,0 +1,164 @@
+"""Dynamic micro-batching: coalesce concurrent single queries into one
+batched executor call.
+
+The engine's executors are compiled per ``(B, Q)`` bucket, so the scheduler's
+job is to gather whatever requests are in flight into the *largest batch the
+wait budget allows* and pad it onto one of a small fixed set of shapes:
+
+* **admission**: requests queue up with a profile (mode/strategy/measure/k/…);
+* **coalescing**: once a request is at the head, the batcher waits at most
+  ``max_wait_ms`` for followers (first-request deadline — a lone query never
+  waits longer than that) and takes at most ``max_batch``;
+* **grouping**: only requests with the *same profile* share an executor call
+  (they must — the profile IS the executor configuration).  Mixed-profile
+  traffic is split into per-profile batches, head-of-queue profile first;
+* **bucketing**: the batch dim is padded up to a power of two by repeating a
+  real row (results of pad rows are dropped), and the facade pads Q the same
+  way — so steady traffic reuses O(log max_batch · log max_Q) compiled
+  programs per profile, which ``SearchEngine.warmup`` precompiles.
+
+Exactness: executors are vmapped over rows and masked over pad columns, so
+coalescing/padding cannot change any row's answer (DESIGN.md §7 pins this
+bitwise in tests).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Callable
+
+from repro.engine.facade import pow2_bucket
+
+
+@dataclasses.dataclass(frozen=True)
+class QueryProfile:
+    """Everything that selects an executor, besides the batch itself.
+
+    Hashable — the batcher groups by it and the cache keys on it.  ``df_cap``
+    should be pinned (``SearchEngine.suggested_df_cap``) for
+    ``strategy='drb', mode='or'`` traffic so the gather width — normally
+    derived per batch — stays static across mixed batches.
+    """
+    mode: str = "and"
+    strategy: str = "auto"
+    measure: str = "tfidf"
+    k: int | None = None
+    window: int | None = None
+    budget: int | None = None
+    beam_width: int | None = None
+    df_cap: int | None = None
+
+    def search_kwargs(self) -> dict:
+        return dict(mode=self.mode, strategy=self.strategy,
+                    measure=self.measure, k=self.k, window=self.window,
+                    budget=self.budget, beam_width=self.beam_width,
+                    df_cap=self.df_cap)
+
+
+@dataclasses.dataclass
+class Batch:
+    """One coalesced executor call: ``items`` are the real requests (any
+    payload the caller tracks), ``queries`` the padded row list sent to the
+    engine (``len(queries) = pow2_bucket(len(items))``)."""
+    profile: QueryProfile
+    items: list
+    queries: list[list[int]]
+
+    @property
+    def n_real(self) -> int:
+        return len(self.items)
+
+
+def pad_rows(rows: list[list[int]]) -> list[list[int]]:
+    """Pad the batch dim to its power-of-two bucket by repeating row 0 —
+    a real query, so no masking/validity special case exists; the extra
+    rows' results are simply dropped."""
+    return rows + [rows[0]] * (pow2_bucket(len(rows)) - len(rows))
+
+
+class MicroBatcher:
+    """Pulls (words, profile, item) tuples from a source and yields padded
+    per-profile batches under the max-wait / max-batch policy.
+
+    ``source(timeout)`` must return one admitted request or raise
+    ``queue.Empty`` — the stdlib queue contract — so the server can hand its
+    bounded admission queue straight in.  The batcher keeps requests it has
+    accepted but not yet batched in an internal deque (arrival order), so
+    nothing is ever dropped here; shedding happens at admission.
+    """
+
+    def __init__(self, source: Callable, *, max_batch: int = 16,
+                 max_wait_ms: float = 2.0, pending_cap: int | None = None,
+                 clock=time.monotonic):
+        if max_batch < 1:
+            raise ValueError(f"max_batch must be >= 1, got {max_batch}")
+        if max_wait_ms < 0:
+            raise ValueError(f"max_wait_ms must be >= 0, got {max_wait_ms}")
+        self._source = source
+        self.max_batch = max_batch
+        self.max_wait = max_wait_ms / 1e3
+        # bound on requests held here awaiting a same-profile batch: without
+        # it, assembling a profile-A batch under a flood of profile-B traffic
+        # would drain the (bounded) admission queue into this (unbounded)
+        # deque and the shed policy would never engage
+        self.pending_cap = max(max_batch, pending_cap or 4 * max_batch)
+        self._clock = clock
+        self._pending: deque = deque()    # (words, profile, item, t_admit)
+
+    def _pull(self, timeout: float) -> bool:
+        import queue as _q
+        try:
+            self._pending.append(self._source(timeout=max(0.0, timeout)))
+            return True
+        except _q.Empty:
+            return False
+
+    def next_batch(self, poll_s: float = 0.05) -> Batch | None:
+        """Block up to ``poll_s`` for traffic, then coalesce and return one
+        batch — or None if the queue stayed empty (callers loop on this, so
+        shutdown flags get re-checked every ``poll_s``)."""
+        if not self._pending and not self._pull(poll_s):
+            return None
+        # head request sets the deadline: wait for followers until the head
+        # has been held max_wait, or a full batch of its profile is ready.
+        # Requests already queued (e.g. admitted while the previous batch was
+        # computing) are always drained first, without waiting — the wait
+        # budget is only ever spent on traffic that hasn't arrived yet.
+        head_profile = self._pending[0][1]
+        deadline = self._pending[0][3] + self.max_wait
+        # running head-profile count: one scan of the leftover deque, then
+        # O(1) per pull — batch assembly must stay cheap on the dispatch
+        # thread, which is the path the batcher exists to protect
+        n_head = sum(1 for r in self._pending if r[1] == head_profile)
+
+        def may_pull() -> bool:
+            return (n_head < self.max_batch
+                    and len(self._pending) < self.pending_cap)
+
+        def pull(timeout: float) -> bool:
+            nonlocal n_head
+            if not self._pull(timeout):
+                return False
+            n_head += self._pending[-1][1] == head_profile
+            return True
+
+        while may_pull() and pull(0.0):
+            pass
+        while may_pull():
+            remaining = deadline - self._clock()
+            if remaining <= 0 or not pull(remaining):
+                break
+            while may_pull() and pull(0.0):
+                pass
+        taken, rest = [], deque()
+        for r in self._pending:
+            if r[1] == head_profile and len(taken) < self.max_batch:
+                taken.append(r)
+            else:
+                rest.append(r)
+        self._pending = rest
+        rows = [list(words) for words, _, _, _ in taken]
+        return Batch(profile=head_profile,
+                     items=[item for _, _, item, _ in taken],
+                     queries=pad_rows(rows))

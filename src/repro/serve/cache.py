@@ -1,0 +1,65 @@
+"""LRU result cache for the serving frontend.
+
+Ranked retrieval over an immutable snapshot is a pure function of the
+normalized request — ``(word ids, profile)`` — so caching is exact by
+construction: a hit replays the stored answer for the *identical* key, it
+never approximates.  (Index updates would need invalidation; snapshots are
+versioned and immutable, so a new index version gets a new server+cache —
+see ROADMAP open items.)
+
+Thread-safe: ``get``/``put`` take a lock (submit threads race the dispatch
+thread).  ``capacity=0`` disables caching (every ``get`` is a miss, ``put``
+drops), so callers don't need a second code path.
+"""
+from __future__ import annotations
+
+import threading
+from collections import OrderedDict
+from typing import Any, Hashable
+
+
+class LRUCache:
+    """Bounded least-recently-used map with hit/miss counters."""
+
+    def __init__(self, capacity: int):
+        if capacity < 0:
+            raise ValueError(f"capacity must be >= 0, got {capacity}")
+        self.capacity = capacity
+        self._data: OrderedDict[Hashable, Any] = OrderedDict()
+        self._lock = threading.Lock()
+        self.hits = 0
+        self.misses = 0
+
+    def __len__(self) -> int:
+        return len(self._data)
+
+    def get(self, key: Hashable):
+        """The cached value (refreshing its recency) or None."""
+        with self._lock:
+            val = self._data.get(key)
+            if val is None:
+                self.misses += 1
+                return None
+            self._data.move_to_end(key)
+            self.hits += 1
+            return val
+
+    def put(self, key: Hashable, value: Any) -> None:
+        if self.capacity == 0:
+            return
+        with self._lock:
+            self._data[key] = value
+            self._data.move_to_end(key)
+            while len(self._data) > self.capacity:
+                self._data.popitem(last=False)          # evict the LRU entry
+
+    def clear(self) -> None:
+        with self._lock:
+            self._data.clear()
+
+    @property
+    def stats(self) -> dict:
+        n = self.hits + self.misses
+        return {"hits": self.hits, "misses": self.misses,
+                "hit_rate": self.hits / n if n else 0.0,
+                "size": len(self._data), "capacity": self.capacity}

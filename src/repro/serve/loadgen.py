@@ -1,0 +1,202 @@
+"""Load generation + latency-percentile reporting for the serving subsystem.
+
+Two standard generator shapes (the serving-systems literature distinguishes
+them because they bound different things):
+
+* **closed loop** — ``n_workers`` clients issue back-to-back requests; this
+  measures *sustainable throughput* at a fixed concurrency (the micro-batcher
+  comparison in ``benchmarks/table6_serving.py`` runs this shape);
+* **open loop** — requests arrive on a Poisson (or fixed-interval) schedule at
+  ``target_qps`` regardless of completions; this measures the *latency
+  distribution under a given offered load* including queueing, and exercises
+  the shed policy when the load exceeds capacity.
+
+Queries can be sampled straight from a (possibly snapshot-restored) engine —
+no corpus needed: document frequencies live in the index and the id<->rank
+maps in the model, which is all band-based sampling requires.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import wtbc
+from repro.serve.server import DEFAULT_PROFILE, SearchServer, ShedError
+
+
+def sample_queries(engine, n_queries: int, words_per_query: int = 3, *,
+                   df_range: tuple[int, int] | None = None,
+                   seed: int = 0) -> list[list[int]]:
+    """Query word-id lists drawn from the engine's own df table (band
+    sampling like ``text.corpus.sample_queries``, but corpus-free so a
+    snapshot-only server can generate traffic).  ``df_range`` defaults to
+    [2, 5% of docs] — the interactive band where queries are selective."""
+    df = np.asarray(engine.idx.df)
+    if df.ndim == 2:                      # sharded: per-shard df -> global-ish
+        df = np.asarray(engine._sharded.global_df)
+    lo, hi = df_range or (2, max(3, int(engine.n_docs) // 20))
+    pool_ranks = np.flatnonzero((df >= lo) & (df <= hi))
+    pool_ranks = pool_ranks[pool_ranks > 0]          # never the '$' separator
+    if len(pool_ranks) < words_per_query:
+        raise ValueError(f"df band [{lo}, {hi}] holds only {len(pool_ranks)} "
+                         "words; widen df_range")
+    word_of_rank = np.asarray(engine.model.word_of_rank)
+    rng = np.random.default_rng(seed)
+    return [[int(w) for w in word_of_rank[
+        rng.choice(pool_ranks, words_per_query, replace=False)]]
+        for _ in range(n_queries)]
+
+
+def sample_ngram_queries(engine, n_queries: int, q_len: int = 3, *,
+                         seed: int = 0) -> list[list[int]]:
+    """Consecutive-token queries decoded straight from the compressed index
+    (no corpus): random document, random offset, ``q_len`` tokens.  The
+    phrase/near workload generator — independently sampled words essentially
+    never co-occur, which would make a positional load test measure only the
+    empty-match fast path."""
+    if engine.backend != "single":
+        raise ValueError("n-gram sampling reads the single-host index "
+                         "(positional modes are single-host anyway)")
+    doc_len = np.asarray(engine.idx.doc_len)
+    eligible = np.flatnonzero(doc_len >= q_len)
+    if not len(eligible):
+        raise ValueError(f"no document holds {q_len} tokens")
+    word_of_rank = np.asarray(engine.model.word_of_rank)
+    rng = np.random.default_rng(seed)
+    out = []
+    for _ in range(n_queries):
+        d = int(rng.choice(eligible))
+        off = int(rng.integers(0, doc_len[d] - q_len + 1))
+        lo = wtbc.doc_start(engine.idx, jnp.int32(d)) + off
+        ranks = np.asarray(wtbc.extract(engine.idx, lo, q_len))
+        out.append([int(w) for w in word_of_rank[ranks]])
+    return out
+
+
+def zipf_workload(queries: list, n_requests: int, *, alpha: float = 1.1,
+                  seed: int = 0) -> list:
+    """A request stream with Zipf-repeated queries (real query logs are
+    heavily skewed — this is what makes result caches earn their keep)."""
+    probs = 1.0 / np.arange(1, len(queries) + 1) ** alpha
+    probs /= probs.sum()
+    rng = np.random.default_rng(seed)
+    return [queries[i] for i in rng.choice(len(queries), n_requests, p=probs)]
+
+
+@dataclasses.dataclass
+class LoadReport:
+    """What one load-generation run measured (latencies in milliseconds).
+    ``n_err`` counts requests the server answered with an error — they are
+    excluded from the latency/throughput numbers, never silently blended."""
+    n_ok: int
+    n_shed: int
+    n_err: int
+    n_timeout: int
+    duration_s: float
+    qps: float
+    p50_ms: float
+    p95_ms: float
+    p99_ms: float
+    mean_ms: float
+    latencies_ms: np.ndarray
+    server_stats: dict
+
+    @classmethod
+    def from_latencies(cls, lats_s: list[float], n_shed: int, n_err: int,
+                       duration_s: float, server: SearchServer,
+                       n_timeout: int = 0) -> "LoadReport":
+        ms = np.asarray(sorted(lats_s)) * 1e3
+        pct = (lambda q: float(np.percentile(ms, q))) if len(ms) else \
+              (lambda q: float("nan"))
+        return cls(n_ok=len(ms), n_shed=n_shed, n_err=n_err,
+                   n_timeout=n_timeout, duration_s=duration_s,
+                   qps=len(ms) / duration_s if duration_s > 0 else 0.0,
+                   p50_ms=pct(50), p95_ms=pct(95), p99_ms=pct(99),
+                   mean_ms=float(ms.mean()) if len(ms) else float("nan"),
+                   latencies_ms=ms, server_stats=server.stats)
+
+    def summary(self) -> str:
+        out = (f"{self.n_ok} ok / {self.n_shed} shed / {self.n_err} err in "
+               f"{self.duration_s:.2f}s"
+               f" | {self.qps:.0f} q/s | p50 {self.p50_ms:.1f}ms"
+               f" | p95 {self.p95_ms:.1f}ms | p99 {self.p99_ms:.1f}ms")
+        if self.n_timeout:
+            out += f" | {self.n_timeout} STILL IN FLIGHT at deadline"
+        return out
+
+
+def closed_loop(server: SearchServer, workload: list, *,
+                n_workers: int = 8, profile=DEFAULT_PROFILE,
+                timeout_s: float = 120.0) -> LoadReport:
+    """``n_workers`` clients drain ``workload`` back-to-back (one outstanding
+    request per client — arrival rate adapts to service rate)."""
+    it = iter(range(len(workload)))
+    it_lock = threading.Lock()
+    lats: list[float] = []
+    shed, errs = [0], [0]
+
+    def client():
+        while True:
+            with it_lock:
+                i = next(it, None)
+            if i is None:
+                return
+            t0 = time.monotonic()
+            try:
+                server.search(workload[i], profile, timeout=timeout_s)
+            except ShedError:       # closed loop + bounded queue: count & move on
+                with it_lock:
+                    shed[0] += 1
+                continue
+            except Exception:       # dispatch error: count it, keep the
+                with it_lock:       # worker alive for the rest of the load
+                    errs[0] += 1
+                continue
+            with it_lock:
+                lats.append(time.monotonic() - t0)
+
+    threads = [threading.Thread(target=client) for _ in range(n_workers)]
+    t0 = time.monotonic()
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    return LoadReport.from_latencies(lats, shed[0], errs[0],
+                                     time.monotonic() - t0, server)
+
+
+def open_loop(server: SearchServer, workload: list, *, target_qps: float,
+              profile=DEFAULT_PROFILE, poisson: bool = True, seed: int = 0,
+              timeout_s: float = 120.0) -> LoadReport:
+    """Submit ``workload`` on a Poisson/fixed schedule at ``target_qps`` and
+    wait for completions; sheds count, they don't block the schedule."""
+    if target_qps <= 0:
+        raise ValueError(f"target_qps must be > 0, got {target_qps}")
+    rng = np.random.default_rng(seed)
+    gaps = (rng.exponential(1.0 / target_qps, size=len(workload)) if poisson
+            else np.full(len(workload), 1.0 / target_qps))
+    arrivals = np.cumsum(gaps)
+    tickets, shed = [], 0
+    t0 = time.monotonic()
+    for q, at in zip(workload, arrivals):
+        lag = t0 + at - time.monotonic()
+        if lag > 0:
+            time.sleep(lag)
+        try:
+            tickets.append(server.submit(q, profile))
+        except ShedError:
+            shed += 1
+    deadline = time.monotonic() + timeout_s
+    for t in tickets:
+        t._event.wait(max(0.0, deadline - time.monotonic()))
+    duration = time.monotonic() - t0
+    lats = [t.latency_s for t in tickets
+            if t.done() and t.error is None and t.latency_s is not None]
+    errs = sum(1 for t in tickets if t.done() and t.error is not None)
+    timeouts = sum(1 for t in tickets if not t.done())
+    return LoadReport.from_latencies(lats, shed, errs, duration, server,
+                                     n_timeout=timeouts)

@@ -1,0 +1,316 @@
+"""Thread-based serving frontend: admission queue -> micro-batcher -> engine
+-> cache, with backpressure and per-request timing.
+
+One dispatch thread owns the engine (executor dispatch is serialized, so jit
+caches never race); submitters interact only with the bounded admission queue
+and the result cache:
+
+    server = SearchServer(engine, max_batch=16, max_wait_ms=2.0)
+    server.warmup(example_queries)        # compile all bucket shapes first
+    with server:
+        row = server.search([w1, w2])     # blocking convenience
+        t = server.submit([w1, w2])       # or async: ticket.result()
+
+Backpressure / shed-load: the admission queue is bounded (``queue_depth``);
+when it is full, ``submit`` raises :class:`ShedError` immediately instead of
+queueing unbounded work — the caller (load balancer) retries elsewhere.  A
+shed request costs microseconds, so an overloaded server stays responsive
+for the traffic it *did* admit.
+
+Exactness: identical to direct ``engine.search`` row-for-row (bitwise —
+pinned in tests): batching only stacks rows, padding only adds dropped rows/
+masked columns, and the cache only replays identical normalized requests.
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+import time
+
+import numpy as np
+
+from repro.serve.batcher import Batch, MicroBatcher, QueryProfile
+from repro.serve.cache import LRUCache
+
+DEFAULT_PROFILE = QueryProfile()
+
+
+class ShedError(RuntimeError):
+    """Admission queue full — request rejected without queueing (shed load)."""
+
+
+@dataclasses.dataclass
+class RowResult:
+    """One request's slice of a batched :class:`SearchResults` (host arrays).
+
+    ``docs``/``scores`` are the (k,) ranked answer; ``n_found`` how many are
+    real; diagnostics mirror ``SearchResults.diagnostics`` per row.
+    """
+    docs: np.ndarray
+    scores: np.ndarray
+    n_found: int
+    work: int
+    k: int
+    mode: str
+    strategy: str
+    measure: str
+    pops: int | None = None
+    overflowed: bool | None = None
+    match_pos: np.ndarray | None = None
+    match_len: np.ndarray | None = None
+
+    def hits(self) -> list[tuple[int, float]]:
+        n = self.n_found
+        return [(int(d), float(s))
+                for d, s in zip(self.docs[:n], self.scores[:n])]
+
+
+class Ticket:
+    """Handle for one in-flight request: wait on :meth:`result`; timings are
+    recorded by the server (``latency_s`` spans submit -> completion,
+    queue wait included — the number a client actually experiences)."""
+
+    __slots__ = ("words", "profile", "t_submit", "t_dispatch", "t_done",
+                 "cache_hit", "batch_size", "_event", "_result", "_error")
+
+    def __init__(self, words, profile):
+        self.words = words
+        self.profile = profile
+        self.t_submit = time.monotonic()
+        self.t_dispatch = None
+        self.t_done = None
+        self.cache_hit = False
+        self.batch_size = 0
+        self._event = threading.Event()
+        self._result = None
+        self._error = None
+
+    def done(self) -> bool:
+        return self._event.is_set()
+
+    @property
+    def error(self) -> Exception | None:
+        """The dispatch-time failure, if this request errored (load reports
+        must not count errored tickets as served)."""
+        return self._error
+
+    def result(self, timeout: float | None = None) -> RowResult:
+        if not self._event.wait(timeout):
+            raise TimeoutError("request still in flight")
+        if self._error is not None:
+            raise self._error
+        return self._result
+
+    @property
+    def latency_s(self) -> float | None:
+        return None if self.t_done is None else self.t_done - self.t_submit
+
+    def _complete(self, result=None, error=None):
+        self._result, self._error = result, error
+        self.t_done = time.monotonic()
+        self._event.set()
+
+
+class SearchServer:
+    """Ties queue -> batcher -> engine -> cache together (one dispatch
+    thread); collects the serving metrics the load harness reports."""
+
+    def __init__(self, engine, *, max_batch: int = 16, max_wait_ms: float = 2.0,
+                 queue_depth: int = 256, cache_size: int = 1024):
+        if queue_depth < 1:
+            raise ValueError(f"queue_depth must be >= 1, got {queue_depth}")
+        self.engine = engine
+        self.cache = LRUCache(cache_size)
+        self._queue: queue.Queue = queue.Queue(maxsize=queue_depth)
+        # pending_cap=queue_depth bounds admitted-but-undispatched work to
+        # 2 x queue_depth (queue + batcher deque) under mixed-profile floods
+        self._batcher = MicroBatcher(self._queue.get, max_batch=max_batch,
+                                     max_wait_ms=max_wait_ms,
+                                     pending_cap=queue_depth)
+        self._thread: threading.Thread | None = None
+        self._running = False
+        self._lock = threading.Lock()
+        self.n_submitted = 0
+        self.n_served = 0
+        self.n_shed = 0
+        self.n_errors = 0
+        self.n_overflowed = 0        # served rows whose heap latched overflow
+        self.batch_hist: dict[int, int] = {}     # real batch size -> count
+        self.dispatch_s = 0.0                    # engine wall time, summed
+
+    # -- lifecycle -----------------------------------------------------------
+
+    def start(self) -> "SearchServer":
+        if self._thread is not None:
+            raise RuntimeError("server already started")
+        self._running = True
+        self._thread = threading.Thread(target=self._run, daemon=True,
+                                        name="search-server-dispatch")
+        self._thread.start()
+        return self
+
+    def stop(self) -> None:
+        """Drain everything already admitted, then stop the dispatch thread."""
+        self._running = False
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    __enter__ = start
+
+    def __exit__(self, *exc):
+        self.stop()
+
+    def warmup(self, example_queries, profile: QueryProfile = DEFAULT_PROFILE,
+               ) -> int:
+        """Precompile every (batch bucket, Q bucket) executor this server's
+        coalescing can produce for ``profile`` — call before admitting
+        traffic so no request ever pays a compile.  Returns the number of
+        executors compiled."""
+        return self.engine.warmup(example_queries,
+                                  max_batch=self._batcher.max_batch,
+                                  **profile.search_kwargs())
+
+    # -- request path --------------------------------------------------------
+
+    def _normalize(self, words, profile: QueryProfile) -> tuple[int, ...]:
+        """Validate ONE query at admission.  Anything that could make
+        ``engine.search`` reject a coalesced batch must be caught here — a
+        poison row inside a batch would otherwise fail its innocent
+        batch-mates."""
+        arr = np.asarray(words, dtype=np.int64)
+        if arr.ndim != 1:
+            raise ValueError(f"submit takes one flat query, got shape "
+                             f"{arr.shape}; submit batch rows individually "
+                             "(coalescing is the server's job)")
+        key = tuple(int(w) for w in arr)
+        if not key:
+            raise ValueError("empty query")
+        V = self.engine.model.vocab_size
+        bad = [w for w in key if not 1 <= w < V]
+        if bad:
+            raise ValueError(f"query word ids must be in [1, {V}); got {bad}")
+        if profile.df_cap is not None:
+            # reuse the facade's own cap formula (no drift) on the already-
+            # validated ids — skipping suggested_df_cap's full re-encode
+            # keeps the per-submit cost to one small fancy-index
+            ranks = np.asarray(self.engine.model.rank_of_word)[list(key)]
+            need = self.engine._df_cap(ranks[None, :],
+                                       np.ones((1, len(key)), bool))
+            if need > profile.df_cap:
+                raise ValueError(
+                    f"query needs df_cap {need} but this profile pins "
+                    f"{profile.df_cap}; route it to a wider profile")
+        return key
+
+    def submit(self, words, profile: QueryProfile = DEFAULT_PROFILE) -> Ticket:
+        """Admit one query; never blocks.  Cache hits complete immediately;
+        a full admission queue raises :class:`ShedError`."""
+        if self._thread is None:
+            raise RuntimeError("server not started")
+        key = self._normalize(words, profile)
+        ticket = Ticket(key, profile)
+        with self._lock:
+            self.n_submitted += 1
+        cached = self.cache.get((key, profile))
+        if cached is not None:
+            ticket.cache_hit = True
+            ticket.batch_size = 1
+            ticket._complete(result=cached)
+            with self._lock:
+                self.n_served += 1
+            return ticket
+        try:
+            self._queue.put_nowait((key, profile, ticket, time.monotonic()))
+        except queue.Full:
+            with self._lock:
+                self.n_shed += 1
+            raise ShedError(f"admission queue full "
+                            f"({self._queue.maxsize} deep); retry later")
+        return ticket
+
+    def search(self, words, profile: QueryProfile = DEFAULT_PROFILE,
+               timeout: float | None = 60.0) -> RowResult:
+        """Blocking submit -> result."""
+        return self.submit(words, profile).result(timeout)
+
+    # -- dispatch thread -----------------------------------------------------
+
+    def _run(self):
+        while self._running or not self._queue.empty() \
+                or self._batcher._pending:
+            batch = self._batcher.next_batch()
+            if batch is not None:
+                self._dispatch(batch)
+
+    def _dispatch(self, batch: Batch):
+        t0 = time.monotonic()
+        for t in batch.items:
+            t.t_dispatch = t0
+            t.batch_size = batch.n_real
+        try:
+            res = self.engine.search(batch.queries,
+                                     **batch.profile.search_kwargs())
+        except Exception as e:                    # profile-level failure
+            for t in batch.items:
+                t._complete(error=e)
+            with self._lock:
+                self.n_errors += batch.n_real
+            return
+        dt = time.monotonic() - t0
+        rows = _slice_rows(res, batch.n_real)
+        n_over = 0
+        for t, row in zip(batch.items, rows):
+            self.cache.put((t.words, t.profile), row)
+            t._complete(result=row)
+            n_over += bool(row.overflowed)
+        with self._lock:
+            self.n_overflowed += n_over
+            self.n_served += batch.n_real
+            self.batch_hist[batch.n_real] = \
+                self.batch_hist.get(batch.n_real, 0) + 1
+            self.dispatch_s += dt
+
+    # -- introspection -------------------------------------------------------
+
+    @property
+    def stats(self) -> dict:
+        with self._lock:
+            n_batches = sum(self.batch_hist.values())
+            return {
+                "submitted": self.n_submitted,
+                "served": self.n_served,
+                "shed": self.n_shed,
+                "errors": self.n_errors,
+                "overflowed": self.n_overflowed,
+                "dispatches": n_batches,
+                "batch_hist": dict(sorted(self.batch_hist.items())),
+                "mean_batch": sum(b * c for b, c in self.batch_hist.items())
+                              / n_batches if n_batches else 0.0,
+                "dispatch_s": self.dispatch_s,
+                "cache": self.cache.stats,
+                "executors": self.engine.stats["executors"],
+                "traces": sum(self.engine.stats["traces"].values()),
+            }
+
+
+def _slice_rows(res, n_real: int) -> list[RowResult]:
+    """Split a batched SearchResults into per-request host rows (pad rows
+    past ``n_real`` are dropped)."""
+    docs = np.asarray(res.docs)
+    scores = np.asarray(res.scores)
+    n_found = np.asarray(res.n_found)
+    work = np.asarray(res.work)
+    pops = None if res.pops is None else np.asarray(res.pops)
+    over = None if res.overflowed is None else np.asarray(res.overflowed)
+    mp = None if res.match_pos is None else np.asarray(res.match_pos)
+    ml = None if res.match_len is None else np.asarray(res.match_len)
+    return [RowResult(
+        docs=docs[b], scores=scores[b], n_found=int(n_found[b]),
+        work=int(work[b]), k=res.k, mode=res.mode, strategy=res.strategy,
+        measure=res.measure,
+        pops=None if pops is None else int(pops[b]),
+        overflowed=None if over is None else bool(over[b]),
+        match_pos=None if mp is None else mp[b],
+        match_len=None if ml is None else ml[b]) for b in range(n_real)]

@@ -148,6 +148,65 @@ def test_executor_cache_retrace_regression(engine_corpus, query_batch):
     assert all(n == 1 for n in engine.stats["traces"].values())
 
 
+def test_mixed_q_traffic_shares_bucketed_executor(engine_corpus, query_batch):
+    """Q is padded to power-of-two buckets: batches whose longest query
+    differs only within a bucket must hit ONE compiled executor (the serving
+    batcher coalesces mixed-length traffic relying on this)."""
+    engine = SearchEngine.build(engine_corpus, EngineConfig(block=512))
+    w = [int(x) for x in query_batch.reshape(-1)[:8]]
+    engine.search([w[:3]], k=5, mode="or", strategy="dr")      # Q=3 -> 4
+    engine.search([w[:4]], k=5, mode="or", strategy="dr")      # Q=4 -> 4
+    assert engine.stats["executors"] == 1
+    # ragged batch: longest row 3 -> same Q bucket, same B -> same executor
+    engine.search([[w[0], w[1], w[2]]], k=5, mode="or", strategy="dr")
+    assert engine.stats["executors"] == 1
+    assert all(n == 1 for n in engine.stats["traces"].values())
+    # bucket boundary crossed -> one (and only one) new executor
+    engine.search([w[:5]], k=5, mode="or", strategy="dr")      # Q=5 -> 8
+    assert engine.stats["executors"] == 2
+    # padded columns are masked out, never scored: Q=3 and Q=4-padded agree
+    r3 = engine.search([w[:3]], k=5, mode="or", strategy="dr")
+    r3b = engine.search([w[:3] + [w[0]]], k=5, mode="or", strategy="dr")
+    assert np.asarray(r3.scores).shape == np.asarray(r3b.scores).shape
+
+
+def test_warmup_precompiles_all_buckets(engine_corpus, query_batch):
+    """After warmup(max_batch=4), traffic at any B <= 4 and any warmed Q
+    bucket runs with ZERO new traces — the serving no-compile guarantee."""
+    engine = SearchEngine.build(engine_corpus, EngineConfig(block=512))
+    w = [int(x) for x in query_batch.reshape(-1)[:6]]
+    examples = [w[:2], w[:3]]                  # Q buckets {2, 4}
+    n = engine.warmup(examples, max_batch=4, k=5, mode="or", strategy="dr")
+    assert n == engine.stats["executors"] == 6          # 2 Q x 3 B buckets
+    before = dict(engine.stats["traces"])
+    # B stays on warmed pow2 buckets (the serving batcher pads B to those);
+    # Q mixes freely within warmed buckets
+    for batch in ([w[:2]], [w[:3]] * 2, [w[:2], w[:3]], [w[:2]] * 4,
+                  [w[:4], w[:3], w[:2], w[:4]]):
+        engine.search(batch, k=5, mode="or", strategy="dr")
+    assert engine.stats["traces"] == before
+
+
+def test_df_cap_pinning(engine, query_batch):
+    """An explicit df_cap keys one executor for mixed DRB/OR traffic, and a
+    cap too small for a batch is rejected instead of truncating the gather."""
+    cap = engine.suggested_df_cap(query_batch)
+    r_auto = engine.search(query_batch, k=10, mode="or", strategy="drb",
+                           measure="bm25")
+    r_pin = engine.search(query_batch, k=10, mode="or", strategy="drb",
+                          measure="bm25", df_cap=cap)
+    np.testing.assert_array_equal(np.asarray(r_auto.docs),
+                                  np.asarray(r_pin.docs))
+    np.testing.assert_array_equal(np.asarray(r_auto.scores),
+                                  np.asarray(r_pin.scores))
+    with pytest.raises(ValueError, match="truncate"):
+        engine.search(query_batch, k=10, mode="or", strategy="drb",
+                      measure="bm25", df_cap=1)
+    with pytest.raises(ValueError, match="df_cap"):
+        engine.search(query_batch, k=10, mode="or", strategy="dr",
+                      df_cap=cap)
+
+
 def test_positional_modes_distinct_executor_keys(engine_corpus, query_batch):
     """phrase vs near get distinct executors; the proximity window is traced
     (changing it must NOT retrace or add executors)."""

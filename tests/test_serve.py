@@ -1,0 +1,449 @@
+"""repro.serve — serving subsystem contract tests.
+
+The one non-negotiable (DESIGN.md §7): nothing on the serving path may change
+ranked output.  Snapshot round-trips, micro-batched dispatch, and cache hits
+are all pinned BITWISE against direct ``engine.search`` — not approximately.
+Plus: scheduler/no-retrace guarantees, backpressure, LRU mechanics, the
+serving smoke (the CI job's contract), and the paper's index-overhead claim.
+"""
+import time
+import types
+
+import numpy as np
+import pytest
+
+from repro.engine import EngineConfig, SearchEngine
+from repro.serve import (LRUCache, QueryProfile, SearchServer, ShedError,
+                         loadgen, snapshot)
+from repro.text import corpus
+
+
+@pytest.fixture(scope="module")
+def serve_corpus():
+    return corpus.make_corpus(n_docs=100, mean_doc_len=50, vocab_size=400,
+                              seed=11)
+
+
+@pytest.fixture(scope="module")
+def serve_engine(serve_corpus):
+    return SearchEngine.build(serve_corpus, EngineConfig(block=512))
+
+
+@pytest.fixture(scope="module")
+def serve_queries(serve_engine):
+    return loadgen.sample_queries(serve_engine, 24, 3, seed=5)
+
+
+def _assert_rows_bitwise(row, direct, b=0):
+    np.testing.assert_array_equal(row.docs, np.asarray(direct.docs[b]))
+    np.testing.assert_array_equal(row.scores, np.asarray(direct.scores[b]))
+    assert row.n_found == int(direct.n_found[b])
+
+
+# ---------------------------------------------------------------------------
+# snapshots
+# ---------------------------------------------------------------------------
+
+SNAPSHOT_COMBOS = [
+    dict(mode="and", strategy="dr", measure="tfidf"),
+    dict(mode="or", strategy="dr", measure="tfidf"),
+    dict(mode="and", strategy="drb", measure="bm25"),
+    dict(mode="or", strategy="drb", measure="bm25"),
+    dict(mode="phrase", strategy="auto", measure="tfidf"),
+    dict(mode="near", strategy="auto", measure="tfidf", window=6),
+]
+
+
+def test_snapshot_roundtrip_bitwise(serve_corpus, serve_engine, serve_queries,
+                                    tmp_path):
+    """save -> load -> search is bitwise identical to the in-memory engine:
+    docs, scores, counts, diagnostics, and positional payloads."""
+    phrase_qs = corpus.sample_ngram_queries(serve_corpus.doc_tokens, 4, 3,
+                                            seed=3)
+    snapshot.save(serve_engine, tmp_path)
+    restored = snapshot.load(tmp_path)
+    assert restored.n_docs == serve_engine.n_docs
+    assert restored.config == serve_engine.config
+    for combo in SNAPSHOT_COMBOS:
+        qs = (phrase_qs if combo["mode"] in ("phrase", "near")
+              else serve_queries[:6])
+        a = serve_engine.search(qs, k=8, **combo)
+        b = restored.search(qs, k=8, **combo)
+        for name in ("docs", "scores", "n_found", "work"):
+            np.testing.assert_array_equal(np.asarray(getattr(a, name)),
+                                          np.asarray(getattr(b, name)),
+                                          err_msg=f"{combo} {name}")
+        for name in ("pops", "overflowed", "match_pos", "match_len"):
+            av, bv = getattr(a, name), getattr(b, name)
+            assert (av is None) == (bv is None), f"{combo} {name}"
+            if av is not None:
+                np.testing.assert_array_equal(np.asarray(av), np.asarray(bv),
+                                              err_msg=f"{combo} {name}")
+    # decode straight from the restored compressed index
+    res = restored.search(serve_queries[:1], k=3, mode="or")
+    sn = restored.snippets(res, length=5)
+    np.testing.assert_array_equal(
+        sn[0][0], serve_engine.snippets(res, length=5)[0][0])
+
+
+def test_snapshot_versioning(serve_engine, tmp_path):
+    p1 = snapshot.save(serve_engine, tmp_path)
+    p2 = snapshot.save(serve_engine, tmp_path)
+    assert (p1.name, p2.name) == ("step_00000001", "step_00000002")
+    assert snapshot.list_versions(tmp_path) == [1, 2]
+    old = snapshot.load(tmp_path, version=1)
+    new = snapshot.load(tmp_path)
+    assert old.n_docs == new.n_docs
+
+
+def test_snapshot_without_drb(tmp_path):
+    docs = [np.arange(1, 9, dtype=np.int64) for _ in range(5)]
+    eng = SearchEngine.build(docs, EngineConfig(with_drb=False), vocab_size=16)
+    snapshot.save(eng, tmp_path)
+    restored = snapshot.load(tmp_path)
+    res = restored.search([[2, 3]], k=2, strategy="auto")
+    assert res.strategy == "dr"
+    with pytest.raises(ValueError, match="with_drb"):
+        restored.search([[2, 3]], k=2, strategy="drb")
+
+
+def test_snapshot_format_guard(serve_engine, tmp_path):
+    from repro.checkpoint import ckpt
+    snapshot.save(serve_engine, tmp_path)
+    man, step = ckpt.read_manifest(tmp_path)
+    man["user_meta"]["snapshot_format"] = 999
+    d = tmp_path / f"step_{step:08d}"
+    (d / "MANIFEST.json").write_text(__import__("json").dumps(man))
+    with pytest.raises(ValueError, match="format"):
+        snapshot.load(tmp_path)
+
+
+@pytest.mark.slow
+def test_sharded_snapshot_roundtrip():
+    """Sharded engine: snapshot -> load rebuilds the mesh and matches the
+    live sharded engine bitwise (subprocess: needs simulated devices)."""
+    import os
+    import subprocess
+    import sys
+    import textwrap
+
+    script = textwrap.dedent("""
+        import os, tempfile
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+        import numpy as np
+        from repro.engine import SearchEngine
+        from repro.serve import snapshot
+        from repro.text import corpus
+
+        cp = corpus.make_corpus(n_docs=48, mean_doc_len=30, vocab_size=200,
+                                seed=6)
+        sharded = SearchEngine.shard(cp, n_shards=4)
+        df = cp.doc_freqs()
+        pool = np.flatnonzero((df >= 2) & (df <= 30))
+        rng = np.random.default_rng(3)
+        qs = np.stack([rng.choice(pool, 2, replace=False) for _ in range(3)])
+        with tempfile.TemporaryDirectory() as d:
+            snapshot.save(sharded, d)
+            restored = snapshot.load(d)
+            assert restored.backend == "sharded"
+            for mode, strategy, measure in [("and", "dr", "tfidf"),
+                                            ("or", "drb", "bm25")]:
+                a = sharded.search(qs, k=8, mode=mode, strategy=strategy,
+                                   measure=measure)
+                b = restored.search(qs, k=8, mode=mode, strategy=strategy,
+                                    measure=measure)
+                assert np.array_equal(np.asarray(a.docs), np.asarray(b.docs))
+                assert np.array_equal(np.asarray(a.scores),
+                                      np.asarray(b.scores)), (mode, strategy)
+            sn = restored.snippets(restored.search(qs, k=2, mode="or"),
+                                   length=4)
+            assert len(sn) == 3
+        print("OK")
+    """)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    r = subprocess.run([sys.executable, "-c", script], env=env, cwd=root,
+                       capture_output=True, text=True, timeout=1200)
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr[-3000:]}"
+
+
+# ---------------------------------------------------------------------------
+# LRU cache
+# ---------------------------------------------------------------------------
+
+def test_lru_eviction_order():
+    c = LRUCache(2)
+    c.put("a", 1), c.put("b", 2)
+    assert c.get("a") == 1                  # refreshes "a"
+    c.put("c", 3)                           # evicts "b" (least recent)
+    assert c.get("b") is None
+    assert c.get("a") == 1 and c.get("c") == 3
+    assert c.stats["hits"] == 3 and c.stats["misses"] == 1
+    assert len(c) == 2
+
+
+def test_lru_disabled_at_zero_capacity():
+    c = LRUCache(0)
+    c.put("a", 1)
+    assert c.get("a") is None
+    assert c.stats == {"hits": 0, "misses": 1, "hit_rate": 0.0,
+                       "size": 0, "capacity": 0}
+    with pytest.raises(ValueError):
+        LRUCache(-1)
+
+
+# ---------------------------------------------------------------------------
+# server: exactness, cache, scheduler, backpressure
+# ---------------------------------------------------------------------------
+
+def test_server_results_bitwise_match_direct(serve_engine, serve_queries):
+    """Micro-batched concurrent traffic == direct single-query search,
+    bitwise, for looped (dr/and) and gather (drb/or) profiles."""
+    profiles = [
+        QueryProfile(mode="and", strategy="dr", k=6),
+        QueryProfile(mode="or", strategy="drb", measure="bm25", k=6,
+                     df_cap=serve_engine.suggested_df_cap(serve_queries)),
+    ]
+    for profile in profiles:
+        server = SearchServer(serve_engine, max_batch=8, max_wait_ms=5.0,
+                              cache_size=0)
+        server.warmup(serve_queries, profile)
+        with server:
+            rep = loadgen.closed_loop(server, serve_queries * 2, n_workers=8,
+                                      profile=profile)
+        assert rep.n_ok == len(serve_queries) * 2
+        assert rep.server_stats["errors"] == 0
+        # some coalescing must actually have happened under 8-way concurrency
+        assert max(rep.server_stats["batch_hist"]) > 1
+        with SearchServer(serve_engine, max_batch=8, cache_size=0) as server2:
+            for q in serve_queries:
+                row = server2.search(q, profile)
+                _assert_rows_bitwise(
+                    row, serve_engine.search([q], **profile.search_kwargs()))
+
+
+def test_server_positional_profile(serve_corpus, serve_engine):
+    """phrase/near profiles serve through the same frontend, with match
+    payloads intact."""
+    qs = corpus.sample_ngram_queries(serve_corpus.doc_tokens, 6, 2, seed=9)
+    profile = QueryProfile(mode="phrase", k=5)
+    with SearchServer(serve_engine, max_batch=4, cache_size=0) as server:
+        for q in qs:
+            row = server.search(list(map(int, q)), profile)
+            direct = serve_engine.search([list(map(int, q))],
+                                         **profile.search_kwargs())
+            _assert_rows_bitwise(row, direct)
+            np.testing.assert_array_equal(row.match_pos,
+                                          np.asarray(direct.match_pos[0]))
+
+
+def test_server_cache_replays_identical_rows(serve_engine, serve_queries):
+    profile = QueryProfile(mode="and", strategy="dr", k=5)
+    with SearchServer(serve_engine, max_batch=4, cache_size=64) as server:
+        first = [server.search(q, profile) for q in serve_queries[:8]]
+        h0 = server.cache.stats["hits"]
+        again = [server.search(q, profile) for q in serve_queries[:8]]
+        assert server.cache.stats["hits"] == h0 + 8
+        for a, b in zip(first, again):
+            np.testing.assert_array_equal(a.docs, b.docs)
+            np.testing.assert_array_equal(a.scores, b.scores)
+        # distinct profile -> distinct cache key, no false sharing
+        other = QueryProfile(mode="or", strategy="dr", k=5)
+        row = server.search(serve_queries[0], other)
+        _assert_rows_bitwise(
+            row, serve_engine.search([serve_queries[0]],
+                                     **other.search_kwargs()))
+
+
+def test_server_zero_retraces_after_warmup(serve_engine, serve_queries):
+    profile = QueryProfile(mode="or", strategy="drb", measure="bm25", k=5,
+                           df_cap=serve_engine.suggested_df_cap(serve_queries))
+    server = SearchServer(serve_engine, max_batch=8, max_wait_ms=2.0,
+                          cache_size=0)
+    server.warmup(serve_queries, profile)
+    before = sum(serve_engine.stats["traces"].values())
+    with server:
+        rep = loadgen.closed_loop(server, serve_queries * 3, n_workers=8,
+                                  profile=profile)
+    assert rep.n_ok == len(serve_queries) * 3
+    assert sum(serve_engine.stats["traces"].values()) == before
+
+
+def _dummy_engine(delay_s: float = 0.0):
+    """A SearchEngine stand-in with a controllable service time — lets the
+    scheduler/backpressure tests run without jit variance."""
+    def search(queries, **kw):
+        if delay_s:
+            time.sleep(delay_s)
+        B = len(queries)
+        k = kw.get("k") or 3
+        return types.SimpleNamespace(
+            docs=np.tile(np.arange(k, dtype=np.int32), (B, 1)),
+            scores=np.zeros((B, k), np.float32),
+            n_found=np.full(B, k, np.int32), work=np.ones(B, np.int32),
+            pops=None, overflowed=None, match_pos=None, match_len=None,
+            k=k, mode=kw.get("mode", "and"), strategy="dr", measure="tfidf")
+    return types.SimpleNamespace(
+        search=search, model=types.SimpleNamespace(vocab_size=100),
+        stats={"executors": 0, "traces": {}},
+        warmup=lambda *a, **kw: 0)
+
+
+def test_server_sheds_when_queue_full():
+    eng = _dummy_engine(delay_s=0.05)
+    with SearchServer(eng, max_batch=1, max_wait_ms=0.0, queue_depth=2,
+                      cache_size=0) as server:
+        tickets = []
+        shed = 0
+        for i in range(40):
+            try:
+                tickets.append(server.submit([1 + i % 9]))
+            except ShedError:
+                shed += 1
+        assert shed > 0                       # backpressure engaged
+        for t in tickets:                     # admitted work still completes
+            t.result(timeout=10.0)
+        assert server.stats["shed"] == shed
+        assert server.stats["served"] == len(tickets)
+
+
+def test_server_coalesces_burst_into_buckets():
+    eng = _dummy_engine(delay_s=0.02)
+    with SearchServer(eng, max_batch=4, max_wait_ms=10.0, queue_depth=64,
+                      cache_size=0) as server:
+        tickets = [server.submit([1, 2]) for _ in range(12)]
+        for t in tickets:
+            t.result(timeout=10.0)
+    hist = server.stats["batch_hist"]
+    assert sum(b * n for b, n in hist.items()) == 12
+    assert max(hist) == 4                     # bursts fill whole batches
+    assert server.stats["dispatches"] < 12    # strictly fewer calls than reqs
+
+
+def test_mixed_profile_flood_keeps_backpressure_bounded():
+    """Assembling one profile's batch must not drain the bounded admission
+    queue into the batcher's deque without limit — under a mixed-profile
+    flood the shed policy still has to engage."""
+    eng = _dummy_engine(delay_s=0.02)
+    depth = 8
+    with SearchServer(eng, max_batch=4, max_wait_ms=50.0, queue_depth=depth,
+                      cache_size=0) as server:
+        pa, pb = QueryProfile(k=3), QueryProfile(k=4)
+        tickets, shed = [], 0
+        for i in range(200):
+            try:
+                tickets.append(server.submit([1 + i % 9], pa if i % 2 else pb))
+            except ShedError:
+                shed += 1
+        assert shed > 0
+        # bounded: queue (depth) + batcher deque (pending_cap == depth)
+        assert len(server._batcher._pending) <= depth
+        for t in tickets:
+            t.result(timeout=20.0)
+        assert server.stats["served"] == len(tickets)
+
+
+def test_loadgen_reports_errors_not_fake_latencies():
+    """A dispatch-time failure must surface as n_err — never as a served
+    request with a healthy-looking latency, and never by killing a client
+    thread mid-workload."""
+    def boom(queries, **kw):
+        raise RuntimeError("engine exploded")
+    eng = _dummy_engine()
+    eng.search = boom
+    with SearchServer(eng, max_batch=4, cache_size=0) as server:
+        rep = loadgen.closed_loop(server, [[3]] * 12, n_workers=3)
+    assert rep.n_ok == 0 and rep.n_err == 12
+    with SearchServer(eng, max_batch=4, cache_size=0) as server:
+        rep = loadgen.open_loop(server, [[3]] * 10, target_qps=500.0,
+                                timeout_s=10.0)
+    assert rep.n_ok == 0 and rep.n_err == 10
+    assert "err" in rep.summary()
+
+
+def test_ngram_sampler_queries_actually_match(serve_engine):
+    """Index-decoded n-grams must phrase-match their source document."""
+    qs = loadgen.sample_ngram_queries(serve_engine, 6, 3, seed=2)
+    res = serve_engine.search(qs, k=3, mode="phrase")
+    assert all(int(n) > 0 for n in np.asarray(res.n_found))
+
+
+def test_server_rejects_bad_requests_at_admission(serve_engine, serve_queries):
+    with SearchServer(serve_engine, cache_size=0) as server:
+        with pytest.raises(ValueError, match="word ids"):
+            server.submit([0])                # reserved separator id
+        with pytest.raises(ValueError, match="empty"):
+            server.submit([])
+        with pytest.raises(ValueError, match="one flat query"):
+            server.submit([[1, 2], [3, 4]])   # batches are the server's job
+        # a query heavier than the profile's pinned df_cap is rejected at
+        # admission — it must never fail its coalesced batch-mates
+        heavy = int(np.asarray(serve_engine.model.word_of_rank)[1])
+        narrow = QueryProfile(mode="or", strategy="drb", measure="bm25",
+                              df_cap=4)
+        with pytest.raises(ValueError, match="wider profile"):
+            server.submit([heavy], narrow)
+    with pytest.raises(RuntimeError, match="not started"):
+        SearchServer(serve_engine).submit([1])
+
+
+def test_server_drains_on_stop():
+    eng = _dummy_engine(delay_s=0.01)
+    server = SearchServer(eng, max_batch=2, max_wait_ms=0.0, queue_depth=64,
+                          cache_size=0).start()
+    tickets = [server.submit([5]) for _ in range(10)]
+    server.stop()                             # must flush, not drop
+    assert all(t.done() for t in tickets)
+    assert server.stats["served"] == 10
+
+
+def test_serving_smoke_200_queries(serve_engine, serve_queries):
+    """The CI smoke contract: 200 queries through the batcher at low load —
+    every one answered, finite p99, zero shed, zero retraces after warmup."""
+    profile = QueryProfile(mode="or", strategy="drb", measure="bm25", k=5,
+                           df_cap=serve_engine.suggested_df_cap(serve_queries))
+    server = SearchServer(serve_engine, max_batch=8, max_wait_ms=2.0,
+                          cache_size=128)
+    server.warmup(serve_queries, profile)
+    before = sum(serve_engine.stats["traces"].values())
+    workload = loadgen.zipf_workload(serve_queries, 200, seed=1)
+    with server:
+        rep = loadgen.closed_loop(server, workload, n_workers=4,
+                                  profile=profile)
+    assert rep.n_ok == 200
+    assert rep.n_shed == 0
+    assert np.isfinite(rep.p99_ms)
+    assert rep.server_stats["errors"] == 0
+    assert sum(serve_engine.stats["traces"].values()) == before
+    assert rep.server_stats["cache"]["hits"] > 0     # Zipf repeats hit
+
+
+# ---------------------------------------------------------------------------
+# space report (paper's 6%-18% overhead claim)
+# ---------------------------------------------------------------------------
+
+def test_index_overhead_within_paper_band():
+    """WTBC query-structure overhead vs the compressed text, at the paper's
+    counter density (block=32768): rank counters + node offsets + separator
+    positions must land in single-digit-to-paper territory (<= 18%).  The
+    O(V) codeword/df tables are reported separately — see README (they are
+    vocabulary metadata both the paper's baseline and the index share, and
+    they amortize with corpus growth; on this synthetic corpus V/n is far
+    larger than any real collection's)."""
+    cp = corpus.make_corpus(n_docs=1200, mean_doc_len=150, vocab_size=10000,
+                            seed=0)
+    eng = SearchEngine.build(cp, EngineConfig(block=32768))
+    rep = eng.space_report()
+    text = rep["level_bytes"]
+    assert text > 100_000                    # the corpus is non-trivial
+    core = (rep["rank_counters"] + rep["node_offsets"]
+            + rep["sep_positions"])
+    ratio = core / text
+    assert 0.02 < ratio < 0.18, f"core overhead {ratio:.1%} outside band"
+    # and the DRB bitmaps stay "a few small bitmaps" (paper: ~+3%; bit_off
+    # is O(V) vocabulary metadata, counted with the tables above)
+    eng.aux
+    rep = eng.space_report()
+    drb_bits = rep["drb_bitmap_bits_bytes"] + rep["drb_bitmap_counters"]
+    assert drb_bits / text < 0.15
