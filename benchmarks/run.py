@@ -5,10 +5,12 @@
 
 Prints ``name,us_per_call,derived`` CSV rows (the harness contract).
 ``--json PATH`` additionally writes the rows as a machine-readable artifact
-(``{"bench": {name: us_per_call}, "beam_sweep": {...}, "serving": {...}}`` —
-the BENCH_PR4.json artifact that carries the perf trajectory; beam-sweep
-entries hold iters/pops ratios vs P=1, serving entries the table 6
-throughput/percentile/cache metrics).  The artifact is also mirrored into
+(``{"bench": {name: us_per_call}, "beam_sweep": {...}, "serving": {...},
+"megabatch": {...}}`` — the BENCH_PR7.json artifact that carries the perf
+trajectory; beam-sweep entries hold iters/pops ratios vs P=1, serving
+entries the table 6 throughput/percentile/cache metrics, megabatch entries
+the table 7 skew/heavy-band tail latencies for mega vs lockstep vs
+unbatched serving).  The artifact is also mirrored into
 ``artifacts/`` so the committed trajectory and the CI upload stay in one
 place.
 """
@@ -36,7 +38,8 @@ def main() -> None:
 
     from benchmarks import (common, distributed_scaling, table1_compression,
                             table2_conjunctive, table3_bagofwords,
-                            table4_positional, table5_beam, table6_serving)
+                            table4_positional, table5_beam, table6_serving,
+                            table7_megabatch)
 
     rows: dict[str, float] = {}
 
@@ -81,6 +84,7 @@ def main() -> None:
     beam = table5_beam.run(bench, print_rows=collect,
                            with_sharded=not args.skip_distributed)
     serving = table6_serving.run(bench, print_rows=collect)
+    megabatch = table7_megabatch.run(bench, print_rows=collect)
 
     if not args.skip_distributed:
         distributed_scaling.run(print_rows=collect)
@@ -100,6 +104,7 @@ def main() -> None:
     if args.json:
         with open(args.json, "w") as f:
             json.dump({"bench": rows, "beam_sweep": beam, "serving": serving,
+                       "megabatch": megabatch,
                        "config": {"docs": args.docs, "full": args.full}},
                       f, indent=2, sort_keys=True)
         print(f"# wrote {args.json}", file=sys.stderr)

@@ -1,0 +1,122 @@
+"""Table 7 (beyond-paper): megabatch continuous batching under skewed load.
+
+Table 6 measures the coalescing frontend on uniform selective traffic;
+this table measures the thing the re-landed megabatch core exists for —
+**tail latency under work skew**.  Two bands over the shared benchmark
+engine (profile ``dr/or/tfidf``, the mega-eligible path):
+
+  skew  : 90% selective queries (df in [2, 8]) + 10% heavy ones (top-df
+          words) — the regime where one heavy row inside a lockstep batch
+          taxes every batch-mate with its full frontier;
+  heavy : 100% heavy queries — the saturated regime.
+
+Three servers per band, identical client concurrency:
+
+  mega     : pool-frontier megabatch core + df-predicted work-bucket
+             admission (heavy queries run alone) + EWMA-adaptive wait;
+  lockstep : the vmapped-heap batch core, no admission lanes — the
+             continuous-batching baseline mega must beat;
+  single   : max_batch=1 — the no-batching floor.
+
+Every pass runs post-warmup and asserts zero retraces (a compile on the
+query path would drown the signal).  The JSON carries p50/p99 per
+(server, band) plus the skew-band p99 ratio ``lockstep / mega`` — the
+number BENCH_PR7.json tracks (> 1 means mega wins the tail).
+"""
+from __future__ import annotations
+
+from benchmarks import common
+from repro.serve import QueryProfile, SearchServer, loadgen
+
+N_LIGHT = 36
+N_HEAVY = 4
+WORDS = 3
+MAX_BATCH = 16
+WORKERS = 32
+K = 10
+
+
+def _traces(engine) -> int:
+    return sum(engine.stats["traces"].values())
+
+
+def _bands(engine, n_requests: int) -> dict[str, list]:
+    n_docs = int(engine.n_docs)
+    light = loadgen.sample_queries(engine, N_LIGHT, WORDS,
+                                   df_range=(2, 8), seed=7)
+    heavy = loadgen.sample_queries(engine, N_HEAVY, WORDS,
+                                   df_range=(n_docs // 4, n_docs), seed=8)
+    rng = __import__("numpy").random.default_rng(7)
+    skew = [heavy[rng.integers(N_HEAVY)] if rng.random() < 0.10
+            else light[rng.integers(N_LIGHT)] for _ in range(n_requests)]
+    return {"skew": skew,
+            "heavy": [heavy[i % N_HEAVY] for i in range(n_requests // 2)],
+            "_warm": light + heavy}
+
+
+def run(bench: common.Bench | None = None, *, n_requests: int = 512,
+        print_rows=print) -> dict:
+    b = bench or common.build()
+    engine = b.engine
+    bands = _bands(engine, n_requests)
+    warm = bands.pop("_warm")
+    results: dict = {"config": {"n_requests": n_requests, "words": WORDS,
+                                "max_batch": MAX_BATCH, "workers": WORKERS,
+                                "heavy_fraction": 0.10,
+                                "profile": f"dr/or/tfidf/k{K}"}}
+
+    servers = {
+        "mega": dict(kw=dict(max_batch=MAX_BATCH, max_wait_ms=2.0,
+                             cache_size=0, queue_depth=4 * WORKERS,
+                             work_buckets=True, adaptive_wait=True),
+                     profile=QueryProfile(mode="or", strategy="dr",
+                                          measure="tfidf", k=K, mega=True)),
+        "lockstep": dict(kw=dict(max_batch=MAX_BATCH, max_wait_ms=2.0,
+                                 cache_size=0, queue_depth=4 * WORKERS),
+                         profile=QueryProfile(mode="or", strategy="dr",
+                                              measure="tfidf", k=K)),
+        "single": dict(kw=dict(max_batch=1, max_wait_ms=0.0, cache_size=0,
+                               queue_depth=4 * WORKERS),
+                       profile=QueryProfile(mode="or", strategy="dr",
+                                            measure="tfidf", k=K)),
+    }
+
+    for band, workload in bands.items():
+        for name, spec in servers.items():
+            srv = SearchServer(engine, **spec["kw"])
+            srv.warmup(warm, spec["profile"])
+            t0 = _traces(engine)
+            with srv:
+                loadgen.closed_loop(srv, workload[:2 * WORKERS],
+                                    n_workers=WORKERS,
+                                    profile=spec["profile"])   # warm pass
+                rep = loadgen.closed_loop(srv, workload, n_workers=WORKERS,
+                                          profile=spec["profile"],
+                                          timeout_s=600.0)
+            retraces = _traces(engine) - t0
+            assert retraces == 0, \
+                f"{retraces} retraces on the {name}/{band} query path"
+            st = rep.server_stats
+            tag = f"{band}_{name}"
+            print_rows(common.csv_row(
+                f"table7/{tag}", rep.mean_ms * 1e3,
+                f"qps={rep.qps:.0f};p50={rep.p50_ms:.2f}ms;"
+                f"p99={rep.p99_ms:.2f}ms;shed={rep.n_shed};"
+                f"mean_batch={st['mean_batch']:.2f}"))
+            results[tag] = {"qps": rep.qps, "p50_ms": rep.p50_ms,
+                            "p95_ms": rep.p95_ms, "p99_ms": rep.p99_ms,
+                            "mean_ms": rep.mean_ms, "shed": rep.n_shed,
+                            "mean_batch": st["mean_batch"],
+                            "batch_hist": st["batch_hist"]}
+
+    for band in ("skew", "heavy"):
+        ratio = (results[f"{band}_lockstep"]["p99_ms"]
+                 / results[f"{band}_mega"]["p99_ms"])
+        results[f"{band}_p99_lockstep_over_mega"] = ratio
+        print_rows(common.csv_row(f"table7/{band}_p99_ratio", 0.0,
+                                  f"lockstep_over_mega={ratio:.2f}x"))
+    return results
+
+
+if __name__ == "__main__":
+    run()

@@ -149,8 +149,10 @@ def topk_drb_and(idx: WTBCIndex, aux: DRBAux, words: jnp.ndarray,
     Beam exactness is trivial here (unlike DR): the walk enumerates and fully
     verifies every candidate regardless of P — P only changes how many are
     in flight per loop trip; consecutive occurrences landing in one document
-    are deduplicated before the bounded top-k insert.  ``beam_width=1`` is
-    step-for-step the paper's triplet walk.
+    are deduplicated before the bounded top-k insert.  The insert keeps the
+    total order (score desc, doc asc), so the retained set — score ties at
+    the k boundary included — is independent of P and of candidate arrival
+    order.  ``beam_width=1`` is step-for-step the paper's triplet walk.
     """
     Q = words.shape[0]
     P = int(beam_width)

@@ -13,6 +13,16 @@ All operations take and return the state tuple
   size       ()       int32
   overflowed ()       bool — any enabled push ever hit a full heap
 
+**Total priority order.**  The heap orders elements by the lexicographic key
+``(score desc, payload[0] asc, payload[1] desc)`` (with the payload columns
+dropped for narrower payloads).  Algorithm 1 stores segments ``[d0, d1)`` as
+``payload[:2]``, and distinct segments always have distinct keys — so the
+order is *total*: pop order does not depend on insertion order, and therefore
+not on the beam width or batching schedule that produced the insertions.
+Score ties (duplicate tf patterns across documents) resolve toward the lower
+``d0``, matching ``lax.top_k`` / ``TopK`` doc-id tie-breaking, so every layer
+of the stack agrees on tie order (DESIGN.md §8).
+
 ``enable`` flags make pushes/pops conditional without ``lax.cond`` branches on
 the large state (disabled ops are no-ops with the same cost).
 
@@ -33,6 +43,37 @@ import jax
 import jax.numpy as jnp
 
 NEG_INF = jnp.float32(-jnp.inf)
+INT32_MAX = jnp.int32(2**31 - 1)
+INT32_MIN = jnp.int32(-2**31)
+
+
+def lex_gt(sa, a0, a1, sb, b0, b1):
+    """Strict elementwise comparison in the total priority order
+    ``(score desc, d0 asc, d1 desc)``: True where key A precedes key B."""
+    return (sa > sb) | ((sa == sb) & ((a0 < b0) | ((a0 == b0) & (a1 > b1))))
+
+
+def lex_argmax(s, d0, d1, valid):
+    """Index (last axis) of the lex-greatest valid ``(s, d0, d1)`` entry:
+    max score, then min d0 among score ties, then max d1.  Three masked
+    reductions — the dense-pool analogue of a heap top (core/mega.py).
+    All-invalid rows return index 0; callers mask with ``valid.any()``."""
+    s_ = jnp.where(valid, s, NEG_INF)
+    c = valid & (s_ == jnp.max(s_, axis=-1, keepdims=True))
+    d0_ = jnp.where(c, d0, INT32_MAX)
+    c = c & (d0_ == jnp.min(d0_, axis=-1, keepdims=True))
+    return jnp.argmax(jnp.where(c, d1, INT32_MIN), axis=-1).astype(jnp.int32)
+
+
+def _prio_gt(sc, pl, i, j):
+    """Heap-internal: element ``i`` strictly precedes element ``j`` under the
+    total order, on whatever payload columns this heap carries."""
+    W = pl.shape[1]
+    z = jnp.int32(0)
+    a0, b0 = (pl[i, 0], pl[j, 0]) if W >= 1 else (z, z)
+    a1, b1 = (pl[i, 1], pl[j, 1]) if W >= 2 else (z, z)
+    # payload col 1 is d1: *descending* in the order (see module docstring)
+    return lex_gt(sc[i], a0, a1, sc[j], b0, b1)
 
 
 class Heap(NamedTuple):
@@ -69,9 +110,9 @@ def push(h: Heap, score: jnp.ndarray, pay: jnp.ndarray,
     payload = payload.at[at].set(jnp.where(enable, pay, payload[at]))
 
     def cond(st):
-        i, sc, _ = st
+        i, sc, pl = st
         par = (i - 1) // 2
-        return (i > 0) & (sc[par] < sc[i])
+        return (i > 0) & _prio_gt(sc, pl, i, par)
 
     def body(st):
         i, sc, pl = st
@@ -96,19 +137,26 @@ def pop(h: Heap) -> tuple[jnp.ndarray, jnp.ndarray, Heap]:
     payload = payload.at[0].set(payload[last])
     size = last
 
-    def cond(st):
-        i, sc, _ = st
+    cap = h.cap
+
+    def children(i, sc, pl):
         l, r = 2 * i + 1, 2 * i + 2
-        ls = jnp.where(l < size, sc[l], NEG_INF)
-        rs = jnp.where(r < size, sc[r], NEG_INF)
-        return jnp.maximum(ls, rs) > sc[i]
+        # clamp the *index* (not the score) so lex gathers stay in bounds;
+        # validity masks make the clamped reads inert
+        lm, rm = jnp.minimum(l, cap - 1), jnp.minimum(r, cap - 1)
+        return lm, rm, l < size, r < size
+
+    def cond(st):
+        i, sc, pl = st
+        lm, rm, lv, rv = children(i, sc, pl)
+        return ((lv & _prio_gt(sc, pl, lm, i))
+                | (rv & _prio_gt(sc, pl, rm, i)))
 
     def body(st):
         i, sc, pl = st
-        l, r = 2 * i + 1, 2 * i + 2
-        ls = jnp.where(l < size, sc[l], NEG_INF)
-        rs = jnp.where(r < size, sc[r], NEG_INF)
-        c = jnp.where(rs > ls, r, l)
+        lm, rm, lv, rv = children(i, sc, pl)
+        r_wins = rv & (~lv | _prio_gt(sc, pl, rm, lm))
+        c = jnp.where(r_wins, rm, lm)
         si, scc = sc[i], sc[c]
         sc = sc.at[i].set(scc).at[c].set(si)
         pi, pc = pl[i], pl[c]
@@ -127,10 +175,11 @@ def pop_p(h: Heap, p: int) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, Heap]
     """Pop the ``p`` best elements (``p`` static).
 
     Returns ``(scores (p,), payloads (p, W), valid (p,), heap)``; pops past
-    the current size are masked out (score -inf, valid False).  Scores come
-    out descending — successive heap pops — which the beam emission rule
-    relies on.  ``pop`` on an empty heap is already a structural no-op (the
-    sift guard sees size 0), so no per-step branching is needed.
+    the current size are masked out (score -inf, valid False).  Pops come out
+    in the total lex order — the same flattened sequence for every ``p``,
+    which the beam emission rule and its schedule-invariance tests rely on.
+    ``pop`` on an empty heap is already a structural no-op (the sift guard
+    sees size 0), so no per-step branching is needed.
     """
     size0 = h.size
 
@@ -173,9 +222,17 @@ def topk_make(k: int) -> TopK:
 
 def topk_insert(t: TopK, score: jnp.ndarray, doc: jnp.ndarray,
                 enable: jnp.ndarray | bool = True) -> TopK:
-    """Keep the k best (score, doc) pairs; ties broken toward lower doc id."""
-    worst = jnp.argmin(t.scores)
-    better = jnp.asarray(enable) & (score > t.scores[worst])
+    """Keep the k best pairs under the total order (score desc, doc asc).
+
+    The retained *set* is insertion-order invariant, ties included: the
+    replaced slot is the lex-least (min score, then max doc) and a candidate
+    enters iff it lex-beats that slot — so a score tie at the boundary always
+    resolves toward the lower doc id, matching the heap/`lax.top_k` order."""
+    m = jnp.min(t.scores)
+    at_min = t.scores == m
+    worst = jnp.argmax(jnp.where(at_min, t.docs, INT32_MIN))
+    better = jnp.asarray(enable) & (
+        (score > m) | ((score == m) & (doc < t.docs[worst])))
     return TopK(
         scores=t.scores.at[worst].set(jnp.where(better, score, t.scores[worst])),
         docs=t.docs.at[worst].set(jnp.where(better, doc, t.docs[worst])),

@@ -1,0 +1,181 @@
+"""Megabatch DR core: per-row best-first frontiers in dense pools (no heap).
+
+``topk_dr_batch`` batches Algorithm 1 by vmapping the serial heap core — but
+a binary-heap sift is a *data-dependent* sequence of two-element swaps, and
+under ``vmap`` each swap lowers to a whole-buffer XLA scatter across the
+batch (measured ~6x slower than running the rows serially).  This module is
+the batched core the serving path actually wants: the frontier of every row
+lives in an **unsorted** ``(B, cap)`` pool and the heap operations become
+dense row-parallel primitives —
+
+  extract-max   three masked reductions (``heap.lex_argmax``): max score,
+                min d0 among score ties, max d1 — the total lex order
+                ``(score desc, d0 asc, d1 desc)`` shared with the heap;
+  insert        first-free-slot scatter (``argmax`` over the free mask);
+                slot position is irrelevant because extraction never looks
+                at order, only at keys.
+
+Each loop trip pops exactly one segment per live row (classical
+``beam_width=1`` semantics per row — the batch dim *is* the parallelism),
+splits multi-document segments with ONE fused ``count_range_batch`` over all
+B×Q left-child counts, and re-inserts the children.  Because pops follow the
+same total lex order as the heap, every row's pop/emission sequence is
+**bitwise identical** to its own serial ``topk_dr`` run at the same Q bucket
+(tests/test_mega.py pins this across ≥200 seeded cases); the known caveat is
+cross-Q-bucket BM25-style 1-ulp drift from shape-dependent FMA, which does
+not apply here (DR scores reduce over the same Q lanes on both paths).
+
+A pool of ``cap >= n_docs + 2`` can never overflow: the frontier of the
+document-range split tree holds at most ``n_docs`` segments (every split
+removes one node and adds at most two, and there are at most ``n_docs - 1``
+splits).  Smaller caps drop the insert and latch ``overflowed`` per row,
+mirroring the heap's contract (DESIGN.md §8).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import heap as H
+from repro.core import wtbc
+from repro.core.ranked import DRResult
+from repro.core.wtbc import WTBCIndex
+
+
+def _pool_insert(pool, s, d0, d1, tf, enable, overflowed):
+    """Insert one segment per row into the first free slot (score -inf marks
+    free).  A full pool drops the enabled insert and latches ``overflowed``."""
+    pool_s, pool_d0, pool_d1, pool_tf = pool
+    B = pool_s.shape[0]
+    free = pool_s == H.NEG_INF
+    has_free = jnp.any(free, axis=1)
+    slot = jnp.argmax(free, axis=1).astype(jnp.int32)
+    ok = enable & has_free
+    overflowed = overflowed | (enable & ~has_free)
+    row = jnp.arange(B, dtype=jnp.int32)
+    pool_s = pool_s.at[row, slot].set(
+        jnp.where(ok, s, pool_s[row, slot]))
+    pool_d0 = pool_d0.at[row, slot].set(
+        jnp.where(ok, d0, pool_d0[row, slot]))
+    pool_d1 = pool_d1.at[row, slot].set(
+        jnp.where(ok, d1, pool_d1[row, slot]))
+    pool_tf = pool_tf.at[row, slot].set(
+        jnp.where(ok[:, None], tf, pool_tf[row, slot]))
+    return (pool_s, pool_d0, pool_d1, pool_tf), overflowed
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("k", "conjunctive", "cap", "max_pops"))
+def topk_dr_mega(idx: WTBCIndex, words: jnp.ndarray, wmask: jnp.ndarray,
+                 idf: jnp.ndarray, *, k: int, conjunctive: bool,
+                 cap: int, max_pops: int | None = None) -> DRResult:
+    """Pool-frontier Algorithm 1 over a whole batch: ``words``/``wmask`` are
+    (B, Q); returns a ``DRResult`` with (B,) / (B, k) leaves, row-for-row
+    bitwise equal to ``topk_dr_batch(..., beam_width=1)`` at the same shapes
+    (same docs, scores, n_found, iters, pops).
+
+    ``max_pops`` is the per-row any-time budget; rows stop independently, so
+    a straggler row never holds finished rows' results hostage — only the
+    loop trip count, which is the max over rows either way.
+    """
+    B, Q = words.shape
+    idf_w = jnp.where(wmask, idf[words], 0.0).astype(jnp.float32)
+
+    def seg_score(tf):
+        # (B, Q) int32 -> (B,) float32.  einsum('bq,bq->b') lowers to the
+        # same per-row sequential dot as the serial core's (Q,)@(Q,) —
+        # bitwise equality with per-row execution depends on this form
+        # (jnp.sum(tf * idf, -1) does NOT reduce in the same order).
+        return jnp.einsum("bq,bq->b", tf.astype(jnp.float32), idf_w)
+
+    def seg_valid(tf, score):
+        if conjunctive:
+            return (jnp.all((tf > 0) | ~wmask, axis=-1)
+                    & jnp.any(wmask, axis=-1))
+        return score > 0.0
+
+    n_docs = idx.n_docs
+    lo0, hi0 = wtbc.segment_extent(idx, jnp.int32(0), n_docs)
+    tf0 = wtbc.count_range_batch(
+        idx, words.reshape(B * Q), jnp.broadcast_to(lo0, (B * Q,)),
+        jnp.broadcast_to(hi0, (B * Q,))).reshape(B, Q) * wmask
+    score0 = seg_score(tf0)
+
+    pool = (jnp.full((B, cap), H.NEG_INF, jnp.float32),
+            jnp.zeros((B, cap), jnp.int32),
+            jnp.zeros((B, cap), jnp.int32),
+            jnp.zeros((B, cap, Q), jnp.int32))
+    overflowed0 = jnp.zeros((B,), bool)
+    pool, overflowed0 = _pool_insert(
+        pool, score0, jnp.zeros((B,), jnp.int32),
+        jnp.broadcast_to(n_docs, (B,)).astype(jnp.int32), tf0,
+        seg_valid(tf0, score0), overflowed0)
+
+    # emission slots (k + 1 trash slot), same layout as the serial core
+    out_docs = jnp.full((B, k + 1), -1, jnp.int32)
+    out_scores = jnp.full((B, k + 1), -jnp.inf, jnp.float32)
+    row = jnp.arange(B, dtype=jnp.int32)
+
+    def live(pool, n_out, pops):
+        ok = (n_out < k) & jnp.any(pool[0] > H.NEG_INF, axis=1)
+        if max_pops is not None:
+            ok = ok & (pops < max_pops)
+        return ok
+
+    def cond(st):
+        pool, _, _, n_out, _, pops, _ = st
+        return jnp.any(live(pool, n_out, pops))
+
+    def body(st):
+        pool, out_docs, out_scores, n_out, iters, pops, overflowed = st
+        pool_s, pool_d0, pool_d1, pool_tf = pool
+        active = live(pool, n_out, pops)
+
+        # extract-max: dense lex-argmax per row, then clear the slot
+        j = H.lex_argmax(pool_s, pool_d0, pool_d1, pool_s > H.NEG_INF)
+        s_p = pool_s[row, j]
+        d0, d1 = pool_d0[row, j], pool_d1[row, j]
+        tf = pool_tf[row, j]
+        pool_s = pool_s.at[row, j].set(
+            jnp.where(active, H.NEG_INF, pool_s[row, j]))
+
+        # one pop per row per trip => a popped singleton is the lex-greatest
+        # pending segment of its row, hence always the next answer (the
+        # P=1 emission rule of the serial core, row-parallel)
+        single = active & ((d1 - d0) == 1)
+        multi = active & ~single
+        slot = jnp.where(single & (n_out < k), n_out, k)
+        out_docs = out_docs.at[row, slot].set(
+            jnp.where(single, d0, out_docs[row, slot]))
+        out_scores = out_scores.at[row, slot].set(
+            jnp.where(single, s_p, out_scores[row, slot]))
+        n_out = jnp.minimum(n_out + single.astype(jnp.int32), k)
+
+        # split every popped multi; all B×Q left-child tfs in ONE fused
+        # batched descent (masked rows compute degenerate extents and are
+        # discarded by the insert enables)
+        mid = (d0 + d1) // 2
+        lo1, hi1 = wtbc.segment_extent(idx, d0, mid)
+        tf1 = wtbc.count_range_batch(
+            idx, words.reshape(B * Q), jnp.repeat(lo1, Q),
+            jnp.repeat(hi1, Q)).reshape(B, Q) * wmask
+        tf2 = tf - tf1
+        s1, s2 = seg_score(tf1), seg_score(tf2)
+        pool = (pool_s, pool_d0, pool_d1, pool_tf)
+        pool, overflowed = _pool_insert(
+            pool, s1, d0, mid, tf1, multi & seg_valid(tf1, s1), overflowed)
+        pool, overflowed = _pool_insert(
+            pool, s2, mid, d1, tf2, multi & seg_valid(tf2, s2), overflowed)
+        return (pool, out_docs, out_scores, n_out,
+                iters + active.astype(jnp.int32),
+                pops + active.astype(jnp.int32), overflowed)
+
+    st0 = (pool, out_docs, out_scores, jnp.zeros((B,), jnp.int32),
+           jnp.zeros((B,), jnp.int32), jnp.zeros((B,), jnp.int32),
+           overflowed0)
+    (_, out_docs, out_scores, n_out, iters, pops,
+     overflowed) = jax.lax.while_loop(cond, body, st0)
+    return DRResult(out_docs[:, :k], out_scores[:, :k], n_out, iters, pops,
+                    overflowed)

@@ -25,9 +25,13 @@ Faithfulness + two deliberate deviations (DESIGN.md §2):
 ``beam_width`` (= P) best segments at once, computes all P×Q left-child term
 frequencies with ONE fused batched descent (``wtbc.count_range_batch``), and
 bulk-reinserts the children.  Emission stays exact: a popped singleton is
-emitted only if its score is >= everything still pending — the heap top after
-the pops and every popped multi-document segment (whose children it bounds);
-the rest are pushed back.  ``beam_width=1`` reproduces the classical one-pop
+emitted only if it precedes — in the heap's *total* lex order
+``(score desc, d0 asc, d1 desc)``, ties included — everything still pending:
+the heap top after the pops and every popped multi-document segment (whose
+descendants it strictly bounds); the rest are pushed back.  Because the
+order is total, the emission sequence is invariant across beam widths and
+insertion schedules, bitwise (tests/test_mega.py pins this).
+``beam_width=1`` reproduces the classical one-pop
 Algorithm 1 exactly (same pop order, same emission, same heap evolution);
 larger P trades a few extra segment expansions for P-wide memory-level
 parallelism in the rank workload — the compact-top-k batching lever of
@@ -134,14 +138,21 @@ def topk_dr(idx: WTBCIndex, words: jnp.ndarray, wmask: jnp.ndarray,
         single = valid & ((d1 - d0) == 1)
         multi = valid & ~single
 
-        # exact-emission threshold: everything still pending is bounded by
-        # the heap top after the P pops and the popped multis' own scores
-        # (score is monotone over concatenation, so children never exceed
-        # their parent).  A popped singleton at or above that bound is the
-        # globally next answer; the rest go back into the heap.
-        t_pend = jnp.maximum(hp.scores[0],
-                             jnp.max(jnp.where(multi, s_p, H.NEG_INF)))
-        emit = single & (s_p >= t_pend)
+        # exact-emission bound: everything still pending is lex-bounded by
+        # the heap top after the P pops and the popped multis' own keys — a
+        # segment's key (score desc, d0 asc, d1 desc) strictly bounds every
+        # descendant's (score is monotone over concatenation; on score ties
+        # a left child keeps d0 but shrinks d1, a right child grows d0).  A
+        # popped singleton that lex-beats the bound is the globally next
+        # answer *including tie order*, so the emission sequence is the same
+        # for every beam width; the rest go back into the heap.
+        cs = jnp.concatenate([s_p, hp.scores[:1]])
+        c0 = jnp.concatenate([d0, hp.payload[:1, 0]])
+        c1 = jnp.concatenate([d1, hp.payload[:1, 1]])
+        cv = jnp.concatenate([multi, (hp.size > 0)[None]])
+        j = H.lex_argmax(cs, c0, c1, cv)
+        emit = single & (~jnp.any(cv)
+                         | H.lex_gt(s_p, d0, d1, cs[j], c0[j], c1[j]))
         slot = n_out + jnp.cumsum(emit.astype(jnp.int32)) - 1
         write = emit & (slot < k)
         at = jnp.where(write, slot, k)

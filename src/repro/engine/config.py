@@ -34,6 +34,12 @@ class EngineConfig:
                §6).  P is *static* per executor — like ``k``, each distinct
                width compiles (and caches) its own program; P=1 is the
                classical one-pop Algorithm 1.
+    default_mega: route batched DR and/or queries through the pool-frontier
+               megabatch core (``core/mega.py``, DESIGN.md §8) when
+               ``search`` is called without ``mega``.  Row-for-row bitwise
+               equal to the serial core at the same Q bucket; ignored by
+               the paths the mega core does not cover (DRB, positional,
+               sharded).  Old snapshots restore with the default (False).
     """
     block: int = bytemap.DEFAULT_BLOCK
     eps: float = 1e-6
@@ -41,6 +47,7 @@ class EngineConfig:
     default_k: int = 10
     default_window: int = 8
     default_beam_width: int = 1
+    default_mega: bool = False
 
     def __post_init__(self):
         if self.block <= 0:

@@ -17,7 +17,7 @@ from typing import Any, NamedTuple
 
 import jax
 
-from repro.core import distributed, drb, positional, ranked
+from repro.core import distributed, drb, mega, positional, ranked
 
 
 class ExecutorKey(NamedTuple):
@@ -38,18 +38,30 @@ class ExecutorKey(NamedTuple):
     beam_width: int       # frontier width P of the DR / DRB-AND loop cores;
                           # static (a distinct P is a distinct XLA program),
                           # normalized to 1 on the paths with no search loop
+    mega: bool = False    # single-backend DR and/or only: run the batch on
+                          # the pool-frontier core (core/mega.py) instead of
+                          # vmapping the serial heap core; normalized False
+                          # everywhere else so keys never split spuriously
 
 
-def make_single_dr(key: ExecutorKey, *, heap_cap: int, note):
+def make_single_dr(key: ExecutorKey, *, heap_cap: int, mega_cap: int, note):
     """(idx, words, wmask, idf) -> DRResult with (B, k) leaves."""
     conjunctive = key.mode == "and"
 
-    def fn(idx, words, wmask, idf):
-        note()
-        return ranked.topk_dr_batch(idx, words, wmask, idf, k=key.k,
-                                    conjunctive=conjunctive,
-                                    heap_cap=heap_cap, max_pops=key.budget,
-                                    beam_width=key.beam_width)
+    if key.mega:
+        def fn(idx, words, wmask, idf):
+            note()
+            return mega.topk_dr_mega(idx, words, wmask, idf, k=key.k,
+                                     conjunctive=conjunctive, cap=mega_cap,
+                                     max_pops=key.budget)
+    else:
+        def fn(idx, words, wmask, idf):
+            note()
+            return ranked.topk_dr_batch(idx, words, wmask, idf, k=key.k,
+                                        conjunctive=conjunctive,
+                                        heap_cap=heap_cap,
+                                        max_pops=key.budget,
+                                        beam_width=key.beam_width)
 
     return jax.jit(fn)
 

@@ -20,7 +20,9 @@ executors.py), so steady-state traffic never retraces.
 """
 from __future__ import annotations
 
+import dataclasses
 import types
+import zlib
 from typing import Any
 
 import jax
@@ -106,11 +108,17 @@ class SearchEngine:
         if backend == "single":
             self._heap_cap = 2 * int(idx.n_docs) + 4
             self._df_np = np.asarray(idx.df)
+            # pool-frontier cap: the split tree's frontier holds <= n_docs
+            # segments (each split removes 1, adds <= 2, over < n_docs
+            # splits), so n_docs + 2 can never overflow (DESIGN.md §8)
+            self._mega_cap = int(idx.n_docs) + 2
         else:
             self._heap_cap = 2 * int(np.max(np.asarray(sharded.idx.n_docs))) + 4
             # per-word max over shards: any shard's DRB/OR gather fits the cap
             self._df_np = np.asarray(sharded.idx.df).max(axis=0)
+            self._mega_cap = 0          # mega covers the single backend only
         self._max_df_cap = int(self._df_np.max()) + 2
+        self._content_tag: int | None = None
 
     # -- construction -------------------------------------------------------
 
@@ -204,6 +212,24 @@ class SearchEngine:
                     n_docs=jnp.int32(self.n_docs))
             self._idf_tables[measure.name] = measure.idf(stats)
         return self._idf_tables[measure.name]
+
+    @property
+    def content_tag(self) -> int:
+        """CRC32 fingerprint of what this engine would *answer with*: the
+        config plus the index's document-frequency, separator-position and
+        document-length tables.  Two engines with equal tags serve equal
+        corpora under equal settings; the serving cache versions its keys
+        with this so an ``swap_engine`` can never replay a stale hit — and a
+        snapshot-restored engine naturally inherits the tag of the engine it
+        was saved from (the arrays ARE the content)."""
+        if self._content_tag is None:
+            idx = self.idx
+            h = zlib.crc32(repr(dataclasses.astuple(self.config)).encode())
+            for leaf in (self._df_np, np.asarray(idx.sep_pos),
+                         np.asarray(idx.doc_len)):
+                h = zlib.crc32(np.ascontiguousarray(leaf), h)
+            self._content_tag = h
+        return self._content_tag
 
     def _avg_doc_len(self) -> jnp.ndarray:
         if self._avg_dl is None:
@@ -322,6 +348,7 @@ class SearchEngine:
                 ex = executors.make_single_positional(key, note=note)
             elif key.strategy == "dr":
                 ex = executors.make_single_dr(key, heap_cap=self._heap_cap,
+                                              mega_cap=self._mega_cap,
                                               note=note)
             else:
                 ex = executors.make_single_drb(key, note=note)
@@ -340,7 +367,8 @@ class SearchEngine:
                mode: str = "and", strategy: str = "auto", measure="tfidf",
                budget: int | None = None, window: int | None = None,
                beam_width: int | None = None,
-               df_cap: int | None = None) -> int:
+               df_cap: int | None = None,
+               mega: bool | None = None) -> int:
         """Compile every executor the given traffic profile can hit before
         admitting traffic: one program per (batch bucket <= pow2(max_batch),
         Q bucket present in ``queries``).  Runs one real (tiny) search per
@@ -367,7 +395,7 @@ class SearchEngine:
         before = sum(self._trace_counts.values())
         kw = dict(k=k, mode=mode, strategy=strategy, measure=measure,
                   budget=budget, window=window, beam_width=beam_width,
-                  df_cap=df_cap)
+                  df_cap=df_cap, mega=mega)
         n_b = pow2_bucket(max_batch).bit_length()     # 1, 2, 4, ..., bucket
         for r in reps.values():
             row = [int(w) for w in r]
@@ -380,7 +408,8 @@ class SearchEngine:
                budget: int | None = None,
                window: int | None = None,
                beam_width: int | None = None,
-               df_cap: int | None = None) -> SearchResults:
+               df_cap: int | None = None,
+               mega: bool | None = None) -> SearchResults:
         """Ranked top-k retrieval.
 
         queries:  (B, Q) / (Q,) array of word ids, or ragged lists of ids.
@@ -416,6 +445,16 @@ class SearchEngine:
                   traffic shares one program.  Exactness-guarded: a cap
                   smaller than the batch actually needs raises instead of
                   silently truncating the gather.  DRB/OR only.
+        mega:     run the batch on the pool-frontier megabatch core
+                  (core/mega.py, DESIGN.md §8) instead of vmapping the
+                  serial heap core (default ``config.default_mega``).
+                  Row-for-row bitwise equal at the same Q bucket; the win
+                  is throughput — per-row heap sifts under ``vmap`` lower
+                  to whole-buffer scatters.  Applies to single-backend DR
+                  and/or only and forces ``beam_width=1`` (the batch dim IS
+                  the frontier parallelism); silently normalized off on
+                  the paths it does not cover (DRB, positional, sharded),
+                  so one serving profile can carry it across strategies.
         """
         k = self.config.default_k if k is None else int(k)
         if k <= 0:
@@ -447,6 +486,15 @@ class SearchEngine:
         beam_width = int(beam_width)
         if mode in POSITIONAL_MODES or (strat == "drb" and mode == "or"):
             beam_width = 1          # no search loop: don't split the executor
+        if mega is None:
+            mega = self.config.default_mega
+        # the mega core covers single-backend DR and/or; elsewhere normalize
+        # it off (not an error: serving profiles carry one flag across
+        # strategy routing) so executor keys never split spuriously
+        mega = bool(mega) and (self.backend == "single" and strat == "dr"
+                               and mode in ("and", "or"))
+        if mega:
+            beam_width = 1      # one pop per row: the batch dim IS the beam
         ranks, mask = self._encode_queries(queries)
         if strat == "drb" and mode == "or":
             auto_cap = self._df_cap(ranks, mask)
@@ -465,7 +513,7 @@ class SearchEngine:
                              f"(got strategy={strat!r}, mode={mode!r})")
         key = executors.ExecutorKey(self.backend, strat, mode, m, k,
                                     tuple(ranks.shape), budget, df_cap,
-                                    beam_width)
+                                    beam_width, mega)
         ex = self._executor(key)
         words, wmask = jnp.asarray(ranks), jnp.asarray(mask)
         match_pos = match_len = None

@@ -87,11 +87,23 @@ def main():
     ap.add_argument("--window", type=int, default=None)
     ap.add_argument("--budget", type=int, default=None)
     ap.add_argument("--beam-width", type=int, default=None)
+    ap.add_argument("--mega", action="store_true",
+                    help="route DR and/or batches through the pool-frontier "
+                         "megabatch core (bitwise-equal, faster batched)")
     # serving knobs
     ap.add_argument("--max-batch", type=int, default=16)
     ap.add_argument("--max-wait-ms", type=float, default=2.0)
     ap.add_argument("--queue-depth", type=int, default=256)
     ap.add_argument("--cache-size", type=int, default=1024)
+    ap.add_argument("--work-buckets", action="store_true",
+                    help="df-predicted admission lanes: coalesce only within "
+                         "factor-8 work buckets; heavy queries run alone")
+    ap.add_argument("--heavy-df", type=int, default=None,
+                    help="summed-df threshold for the batch-1 heavy lane "
+                         "(default: 2x the engine's document count)")
+    ap.add_argument("--adaptive-wait", action="store_true",
+                    help="EWMA inter-arrival tracking: coalescing wait "
+                         "drops to 0 while the stream is idle")
     # load shape
     ap.add_argument("--requests", type=int, default=500)
     ap.add_argument("--distinct", type=int, default=64,
@@ -130,12 +142,16 @@ def main():
         mode=args.mode, strategy=args.strategy, measure=args.measure,
         k=args.k, window=args.window, budget=args.budget,
         beam_width=args.beam_width,
-        df_cap=engine.suggested_df_cap(queries) if routed_drb else None)
+        df_cap=engine.suggested_df_cap(queries) if routed_drb else None,
+        mega=True if args.mega else None)
 
     server = SearchServer(engine, max_batch=args.max_batch,
                           max_wait_ms=args.max_wait_ms,
                           queue_depth=args.queue_depth,
-                          cache_size=args.cache_size)
+                          cache_size=args.cache_size,
+                          work_buckets=args.work_buckets,
+                          heavy_df=args.heavy_df,
+                          adaptive_wait=args.adaptive_wait)
     print("warming up (compiling executor buckets) ...", flush=True)
     try:
         n = server.warmup(queries, profile)

@@ -3,9 +3,10 @@
 Ranked retrieval over an immutable snapshot is a pure function of the
 normalized request — ``(word ids, profile)`` — so caching is exact by
 construction: a hit replays the stored answer for the *identical* key, it
-never approximates.  (Index updates would need invalidation; snapshots are
-versioned and immutable, so a new index version gets a new server+cache —
-see ROADMAP open items.)
+never approximates.  Index updates need invalidation: the server versions
+its keys with the engine's content tag and ``SearchServer.swap_engine``
+clears the cache after the drain, so a hit can never cross engine versions
+even mid-swap (DESIGN.md §8).
 
 Thread-safe: ``get``/``put`` take a lock (submit threads race the dispatch
 thread).  ``capacity=0`` disables caching (every ``get`` is a miss, ``put``

@@ -19,7 +19,13 @@ for the traffic it *did* admit.
 
 Exactness: identical to direct ``engine.search`` row-for-row (bitwise —
 pinned in tests): batching only stacks rows, padding only adds dropped rows/
-masked columns, and the cache only replays identical normalized requests.
+masked columns, and the cache only replays identical normalized requests —
+under a key versioned by the engine's content tag, so replays can never
+cross an :meth:`SearchServer.swap_engine` (drain -> swap -> clear).
+
+Tail isolation (``work_buckets=True``): admission predicts per-query work
+from summed word document frequencies and batches only within factor-8 work
+lanes; predicted-heavy queries run alone (DESIGN.md §8).
 """
 from __future__ import annotations
 
@@ -30,7 +36,8 @@ import time
 
 import numpy as np
 
-from repro.serve.batcher import Batch, MicroBatcher, QueryProfile
+from repro.serve.batcher import (DEFAULT_LANE, Batch, Lane, MicroBatcher,
+                                 QueryProfile, work_bucket)
 from repro.serve.cache import LRUCache
 
 DEFAULT_PROFILE = QueryProfile()
@@ -117,24 +124,43 @@ class SearchServer:
     thread); collects the serving metrics the load harness reports."""
 
     def __init__(self, engine, *, max_batch: int = 16, max_wait_ms: float = 2.0,
-                 queue_depth: int = 256, cache_size: int = 1024):
+                 queue_depth: int = 256, cache_size: int = 1024,
+                 work_buckets: bool = False, heavy_df: int | None = None,
+                 adaptive_wait: bool = False):
+        """``work_buckets`` turns on df-predicted admission lanes: queries
+        coalesce only within a factor-8 bucket of their summed word document
+        frequency, and queries at or past ``heavy_df`` (default: twice the
+        engine's document count) run at batch size 1 so they never tax
+        lighter batch-mates (DESIGN.md §8).  ``adaptive_wait`` collapses the
+        coalescing wait to 0 while the arrival stream is idle."""
         if queue_depth < 1:
             raise ValueError(f"queue_depth must be >= 1, got {queue_depth}")
         self.engine = engine
         self.cache = LRUCache(cache_size)
+        self.work_buckets = work_buckets
+        self._heavy_df_explicit = heavy_df is not None
+        self.heavy_df = heavy_df if heavy_df is not None else \
+            2 * int(getattr(engine, "n_docs", 1 << 29))
+        # engine content tag versions every cache key: a swapped-in engine
+        # can never satisfy a hit stored under its predecessor
+        self._tag = getattr(engine, "content_tag", None)
         self._queue: queue.Queue = queue.Queue(maxsize=queue_depth)
         # pending_cap=queue_depth bounds admitted-but-undispatched work to
         # 2 x queue_depth (queue + batcher deque) under mixed-profile floods
         self._batcher = MicroBatcher(self._queue.get, max_batch=max_batch,
                                      max_wait_ms=max_wait_ms,
-                                     pending_cap=queue_depth)
+                                     pending_cap=queue_depth,
+                                     adaptive_wait=adaptive_wait)
         self._thread: threading.Thread | None = None
         self._running = False
+        self._draining = False       # swap in progress: shed new admissions
+        self._n_inflight = 0         # admitted, not yet completed/errored
         self._lock = threading.Lock()
         self.n_submitted = 0
         self.n_served = 0
         self.n_shed = 0
         self.n_errors = 0
+        self.n_swaps = 0
         self.n_overflowed = 0        # served rows whose heap latched overflow
         self.batch_hist: dict[int, int] = {}     # real batch size -> count
         self.dispatch_s = 0.0                    # engine wall time, summed
@@ -204,16 +230,31 @@ class SearchServer:
                     f"{profile.df_cap}; route it to a wider profile")
         return key
 
+    def _lane_of(self, key: tuple[int, ...]) -> Lane:
+        """df-predicted admission lane (DEFAULT_LANE when work bucketing is
+        off or the engine exposes no df table — dummy engines still serve)."""
+        if not self.work_buckets:
+            return DEFAULT_LANE
+        df = getattr(self.engine, "_df_np", None)
+        rank_of = getattr(getattr(self.engine, "model", None),
+                          "rank_of_word", None)
+        if df is None or rank_of is None:
+            return DEFAULT_LANE
+        work = int(df[np.asarray(rank_of)[list(key)]].sum())
+        heavy = work >= self.heavy_df
+        return Lane(bucket=work_bucket(work), cap=1 if heavy else None)
+
     def submit(self, words, profile: QueryProfile = DEFAULT_PROFILE) -> Ticket:
         """Admit one query; never blocks.  Cache hits complete immediately;
-        a full admission queue raises :class:`ShedError`."""
+        a full admission queue — or a drain in progress (:meth:`swap_engine`)
+        — raises :class:`ShedError`."""
         if self._thread is None:
             raise RuntimeError("server not started")
         key = self._normalize(words, profile)
         ticket = Ticket(key, profile)
         with self._lock:
             self.n_submitted += 1
-        cached = self.cache.get((key, profile))
+        cached = self.cache.get((key, profile, self._tag))
         if cached is not None:
             ticket.cache_hit = True
             ticket.batch_size = 1
@@ -221,10 +262,21 @@ class SearchServer:
             with self._lock:
                 self.n_served += 1
             return ticket
+        lane = self._lane_of(key)
+        with self._lock:
+            if self._draining:
+                self.n_shed += 1
+                raise ShedError("engine swap in progress (draining); "
+                                "retry shortly")
+            # counted before the put so a swap can never observe 0 while an
+            # admitted request is still on its way to the dispatch thread
+            self._n_inflight += 1
         try:
-            self._queue.put_nowait((key, profile, ticket, time.monotonic()))
+            self._queue.put_nowait((key, profile, ticket, time.monotonic(),
+                                    lane))
         except queue.Full:
             with self._lock:
+                self._n_inflight -= 1
                 self.n_shed += 1
             raise ShedError(f"admission queue full "
                             f"({self._queue.maxsize} deep); retry later")
@@ -234,6 +286,45 @@ class SearchServer:
                timeout: float | None = 60.0) -> RowResult:
         """Blocking submit -> result."""
         return self.submit(words, profile).result(timeout)
+
+    def swap_engine(self, new_engine, *, drain_timeout: float = 60.0):
+        """Hot-swap the engine: **drain -> swap -> clear cache**.
+
+        New admissions shed (``ShedError``) while the drain runs; every
+        request admitted *before* the swap completes against the old engine
+        (its answers stay version-consistent), then the engine reference and
+        cache tag flip and the result cache is cleared — tagged keys make
+        the clear belt-and-braces: even a surviving entry could never match
+        a key built with the new tag.  Returns the old engine.
+        """
+        if self._thread is None:
+            raise RuntimeError("server not started")
+        with self._lock:
+            if self._draining:
+                raise RuntimeError("another swap is already draining")
+            self._draining = True
+        try:
+            deadline = time.monotonic() + drain_timeout
+            while True:
+                with self._lock:
+                    if self._n_inflight == 0:
+                        break
+                if time.monotonic() > deadline:
+                    raise TimeoutError(
+                        f"drain did not finish in {drain_timeout}s "
+                        f"({self._n_inflight} requests still in flight)")
+                time.sleep(0.001)
+            old, self.engine = self.engine, new_engine
+            self._tag = getattr(new_engine, "content_tag", None)
+            if not self._heavy_df_explicit:     # re-derive for the new corpus
+                self.heavy_df = 2 * int(getattr(new_engine, "n_docs", 1 << 29))
+            self.cache.clear()
+            with self._lock:
+                self.n_swaps += 1
+            return old
+        finally:
+            with self._lock:
+                self._draining = False
 
     # -- dispatch thread -----------------------------------------------------
 
@@ -257,17 +348,19 @@ class SearchServer:
                 t._complete(error=e)
             with self._lock:
                 self.n_errors += batch.n_real
+                self._n_inflight -= batch.n_real
             return
         dt = time.monotonic() - t0
         rows = _slice_rows(res, batch.n_real)
         n_over = 0
         for t, row in zip(batch.items, rows):
-            self.cache.put((t.words, t.profile), row)
+            self.cache.put((t.words, t.profile, self._tag), row)
             t._complete(result=row)
             n_over += bool(row.overflowed)
         with self._lock:
             self.n_overflowed += n_over
             self.n_served += batch.n_real
+            self._n_inflight -= batch.n_real
             self.batch_hist[batch.n_real] = \
                 self.batch_hist.get(batch.n_real, 0) + 1
             self.dispatch_s += dt
@@ -283,6 +376,9 @@ class SearchServer:
                 "served": self.n_served,
                 "shed": self.n_shed,
                 "errors": self.n_errors,
+                "swaps": self.n_swaps,
+                "inflight": self._n_inflight,
+                "engine_tag": self._tag,
                 "overflowed": self.n_overflowed,
                 "dispatches": n_batches,
                 "batch_hist": dict(sorted(self.batch_hist.items())),

@@ -15,7 +15,9 @@ Array payloads ride the crash-safe ``repro.checkpoint.ckpt`` machinery
 (write-to-tmp, fsync'd manifest, atomic rename, per-leaf CRC32s) in its
 ``fmt="npy"`` layout: one raw ``.npy`` per leaf, so ``load`` memory-maps
 them — the arrays alias the snapshot files and nothing is materialized until
-first touch / device placement (zero-copy on the host side).  Structure
+first touch.  On the CPU backend even device placement is zero-copy:
+``jax.device_put`` aliases the 64-byte-aligned mmap'd pages directly (see
+``_device_put``), so a server boots in O(metadata), not O(index).  Structure
 (tuple arities, static ``(s, c)``, per-level block sizes, backend) travels in
 the manifest's ``user_meta``; ``load`` rebuilds a skeleton pytree from it and
 lets ``ckpt.restore`` fill in the leaves by name.
@@ -202,6 +204,15 @@ def load(snap_dir: str | pathlib.Path, version: int | None = None, *,
 
 
 def _device_put(tree):
-    """Host arrays -> device arrays (the one unavoidable copy; until here the
-    mmap'd leaves still alias the snapshot files)."""
-    return jax.tree.map(jnp.asarray, tree)
+    """Host arrays -> device arrays.
+
+    On the CPU backend ``jax.device_put`` *aliases* host buffers that are
+    64-byte aligned instead of copying — and ``.npy`` array payloads are
+    64-byte aligned by format (header padding), so the mmap'd, read-only
+    snapshot leaves become device arrays **zero-copy**: boot touches no
+    data pages until a query faults them in (tests/test_mega.py pins the
+    aliasing via ``unsafe_buffer_pointer``).  Dtype canonicalization
+    (int64 -> int32 under the default x64 setting) matches ``jnp.asarray``
+    exactly, so results are identical either way; non-CPU backends pay the
+    one unavoidable host->device copy."""
+    return jax.tree.map(jax.device_put, tree)

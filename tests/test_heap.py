@@ -53,3 +53,64 @@ def test_bounded_topk(pairs, k):
     # the bounded structure keeps the k best scores
     assert got == sorted(want, reverse=True)[: len(got)]
     assert len(got) == min(k, len(pairs))
+
+
+# ---------------------------------------------------------------------------
+# total lex order (score desc, d0 asc, d1 desc) — DESIGN.md §8
+# ---------------------------------------------------------------------------
+
+def _drain(h):
+    out = []
+    while int(h.size) > 0:
+        s, p, h = H.pop(h)
+        out.append((float(s), int(p[0]), int(p[1])))
+    return out
+
+
+def test_pop_p_tie_break_follows_total_order():
+    """pop_p drains score ties by (d0 asc, d1 desc) — the same flattened
+    sequence at any P, whatever order the pushes arrived in."""
+    entries = [(2.0, 5, 9), (2.0, 1, 9), (2.0, 1, 30), (3.0, 7, 8),
+               (2.0, 5, 12)]
+    expect = sorted(entries, key=lambda e: (-e[0], e[1], -e[2]))
+    for order in (entries, entries[::-1]):
+        h = H.make(16, 2)
+        for s, d0, d1 in order:
+            h = H.push(h, jnp.float32(s), jnp.array([d0, d1], jnp.int32))
+        ss, pp, vv, h = H.pop_p(h, 5)
+        got = [(float(s), int(p[0]), int(p[1]))
+               for s, p, v in zip(np.asarray(ss), np.asarray(pp),
+                                  np.asarray(vv)) if v]
+        assert got == expect
+        assert int(h.size) == 0
+
+
+def test_push_many_all_equal_scores_pops_by_payload():
+    """Degenerate bulk insert — every score identical: pop order falls
+    entirely to the payload key, independent of the array order pushed."""
+    pays = np.array([[3, 9], [0, 9], [0, 40], [2, 9], [1, 9]], np.int32)
+    expect = [(1.0, 0, 40), (1.0, 0, 9), (1.0, 1, 9), (1.0, 2, 9),
+              (1.0, 3, 9)]
+    for perm in (np.arange(5), np.arange(5)[::-1]):
+        h = H.make(12, 2)
+        h = H.push_many(h, jnp.ones(5, jnp.float32), jnp.asarray(pays[perm]),
+                        jnp.ones(5, bool))
+        assert _drain(h) == expect
+
+
+def test_push_many_overflow_latches_and_keeps_best():
+    """Bulk pushes past capacity drop elements but LATCH ``overflowed`` —
+    the signal SearchResults.diagnostics surfaces to callers."""
+    h = H.make(3, 2)
+    scores = jnp.asarray(np.array([5.0, 4.0, 3.0, 2.0, 1.0], np.float32))
+    pays = jnp.asarray(np.arange(10, dtype=np.int32).reshape(5, 2))
+    enable = jnp.ones(5, bool)
+    h = H.push_many(h, scores, pays, enable)
+    assert bool(h.overflowed)
+    assert int(h.size) == 3
+    # disabled pushes against a full heap must NOT latch
+    h2 = H.make(3, 2)
+    h2 = H.push_many(h2, scores, pays,
+                     jnp.asarray(np.array([1, 1, 1, 0, 0], bool)))
+    assert not bool(h2.overflowed)
+    assert [s for s, _, _ in _drain(h)] == [5.0, 4.0, 3.0]

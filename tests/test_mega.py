@@ -1,0 +1,501 @@
+"""Megabatch core + admission lanes + hot-swap serving — invariance suites.
+
+The re-landed continuous-batching core (DESIGN.md §8) rests on one
+structural claim: the search frontier is ordered by a TOTAL lexicographic
+key ``(score desc, d0 asc, d1 desc)``, so pop/emission order cannot depend
+on insertion order, beam width, pool capacity, or batching schedule.  This
+module pins that claim at every layer:
+
+* **order layer** — property tests: heap pop sequences are identical across
+  P ∈ {1, 4, 16} and across insertion orders (ties included), and the dense
+  pool's ``lex_argmax`` extraction reproduces the heap sequence at any
+  capacity / slot placement;
+* **kernel layer** — a ≥200-case seeded differential sweep pinning
+  ``mega=True`` batches BITWISE against per-row serial execution at matched
+  Q buckets (AND/OR × tfidf/bm25 × DR/DRB), plus the documented
+  cross-Q-bucket BM25 ulp-drift caveat;
+* **admission layer** — factor-8 work buckets, the heavy batch-1 lane, the
+  oldest-request starvation bound, EWMA-adaptive coalescing wait;
+* **serving layer** — mega-batched / cached / swapped-engine / snapshot-
+  restored answers all bitwise equal to direct ``engine.search``, the
+  drain -> swap -> clear protocol, and zero-copy snapshot boot.
+"""
+import queue
+import threading
+import time
+import types
+
+import jax
+import numpy as np
+import pytest
+
+from _hypothesis_shim import given, settings, st
+
+from repro.core import heap as H
+from repro.engine import EngineConfig, SearchEngine
+from repro.serve import QueryProfile, SearchServer, ShedError, snapshot
+from repro.serve.batcher import DEFAULT_LANE, Lane, MicroBatcher, work_bucket
+from repro.text import corpus
+
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# shared fixtures / helpers
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def mega_queries(engine_corpus):
+    df = engine_corpus.doc_freqs()
+    pool = np.flatnonzero((df >= 2) & (df <= 40))
+    rng = np.random.default_rng(17)
+    return [list(map(int, rng.choice(pool, 3, replace=False)))
+            for _ in range(10)]
+
+
+@pytest.fixture(scope="module")
+def engine_b(small_corpus):
+    """A second engine over a different corpus — swap-target with a distinct
+    content tag (word ids < 400 are valid in both vocabularies)."""
+    return SearchEngine.build(small_corpus, EngineConfig(block=512))
+
+
+def _row_equals(row, res, b=0):
+    np.testing.assert_array_equal(row.docs, np.asarray(res.docs[b]))
+    np.testing.assert_array_equal(row.scores, np.asarray(res.scores[b]))
+    assert row.n_found == int(res.n_found[b])
+
+
+def _lex_sorted(entries):
+    """The total priority order: score desc, d0 asc, d1 desc."""
+    return sorted(entries, key=lambda e: (-e[0], e[1], -e[2]))
+
+
+def _heap_pop_all(entries, p=1):
+    """Push ``(score, d0, d1)`` entries, then drain via pop (p=1) or pop_p."""
+    h = H.make(len(entries) + 4, 2)
+    for s, d0, d1 in entries:
+        h = H.push(h, jnp.float32(s), jnp.array([d0, d1], jnp.int32))
+    out = []
+    while int(h.size) > 0:
+        if p == 1:
+            s, pay, h = H.pop(h)
+            out.append((float(s), int(pay[0]), int(pay[1])))
+        else:
+            ss, pp, vv, h = H.pop_p(h, p)
+            out.extend((float(s), int(pl[0]), int(pl[1]))
+                       for s, pl, v in zip(np.asarray(ss), np.asarray(pp),
+                                           np.asarray(vv)) if v)
+    return out
+
+
+SEGMENTS = st.lists(
+    st.tuples(st.sampled_from([0.0, 1.5, 3.0]),     # few scores => many ties
+              st.integers(0, 7), st.integers(8, 15)),
+    min_size=1, max_size=14, unique=True)
+
+
+# ---------------------------------------------------------------------------
+# order layer: schedule invariance of the total lex order
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=10, deadline=None)
+@given(entries=SEGMENTS, seed=st.integers(0, 2**31 - 1))
+def test_pop_sequence_invariant_across_widths_and_orders(entries, seed):
+    """The flattened pop sequence is THE sorted total order — identical for
+    pop, pop_p(4), pop_p(16), and for any insertion order (distinct keys,
+    heavy score ties)."""
+    expect = _lex_sorted(entries)
+    shuffled = list(entries)
+    np.random.default_rng(seed).shuffle(shuffled)
+    for order in (entries, shuffled):
+        for p in (1, 4, 16):
+            assert _heap_pop_all(order, p) == expect, (order, p)
+
+
+@settings(max_examples=10, deadline=None)
+@given(entries=SEGMENTS, seed=st.integers(0, 2**31 - 1))
+def test_pool_extraction_matches_heap_at_any_capacity(entries, seed):
+    """Dense-pool extract-max (``lex_argmax`` + slot clear) reproduces the
+    heap's pop sequence whatever the pool capacity or slot placement —
+    slot position carries no ordering information."""
+    expect = _lex_sorted(entries)
+    n = len(entries)
+    rng = np.random.default_rng(seed)
+    for cap in (n, n + 3, 2 * n + 5):
+        slots = rng.choice(cap, size=n, replace=False)
+        s = np.full(cap, -np.inf, np.float32)
+        d0 = np.zeros(cap, np.int32)
+        d1 = np.zeros(cap, np.int32)
+        s[slots] = [e[0] for e in entries]
+        d0[slots] = [e[1] for e in entries]
+        d1[slots] = [e[2] for e in entries]
+        got = []
+        for _ in range(n):
+            j = int(H.lex_argmax(jnp.asarray(s), jnp.asarray(d0),
+                                 jnp.asarray(d1), jnp.asarray(s > -np.inf)))
+            got.append((float(s[j]), int(d0[j]), int(d1[j])))
+            s[j] = -np.inf
+        assert got == expect, cap
+
+
+def test_all_equal_scores_degenerate_pool():
+    """Degenerate pool: every score equal — order falls entirely to the
+    payload (d0 asc, then d1 desc), for the heap and the pool alike."""
+    entries = [(1.0, d0, d1) for d0 in (3, 1, 2, 0) for d1 in (9, 12)]
+    expect = [(1.0, d0, d1) for d0 in (0, 1, 2, 3) for d1 in (12, 9)]
+    assert _lex_sorted(entries) == expect
+    assert _heap_pop_all(entries) == expect
+    assert _heap_pop_all(entries, p=4) == expect
+
+
+# ---------------------------------------------------------------------------
+# kernel layer: >= 200-case differential sweep, mega vs serial, bitwise
+# ---------------------------------------------------------------------------
+
+SWEEP_COMBOS = [
+    ("and", "dr", "tfidf"),
+    ("or", "dr", "tfidf"),
+    ("and", "drb", "tfidf"),
+    ("and", "drb", "bm25"),
+    ("or", "drb", "tfidf"),
+    ("or", "drb", "bm25"),
+]
+CASES_PER_COMBO = 35          # 6 x 35 = 210 cases (ISSUE floor: 200)
+
+
+def test_sweep_meets_case_floor():
+    assert len(SWEEP_COMBOS) * CASES_PER_COMBO >= 200
+
+
+def _sweep_cases(engine_corpus, seed, n_cases, B=4, L=3):
+    """n_cases batches of B queries, all L words long — one (B, Q) bucket
+    per combo, so every comparison runs at a MATCHED Q bucket (the bitwise
+    contract's precondition) and compiles each executor exactly once."""
+    df = engine_corpus.doc_freqs()
+    pool = np.flatnonzero((df >= 2) & (df <= 60))
+    rng = np.random.default_rng(seed)
+    return [[list(map(int, rng.choice(pool, L, replace=False)))
+             for _ in range(B)] for _ in range(n_cases)]
+
+
+@pytest.mark.parametrize(("mode", "strategy", "measure"),
+                         SWEEP_COMBOS,
+                         ids=["-".join(c) for c in SWEEP_COMBOS])
+def test_differential_sweep_bitwise(engine, engine_corpus, mode, strategy,
+                                    measure):
+    """Seeded sweep: a mega=True batch equals per-row serial execution
+    bitwise — docs, scores, n_found, and (on the DR paths, where the loop
+    counters are part of the contract) work/pops/overflowed too.  On DRB
+    combos ``mega`` normalizes off, so the sweep pins the lockstep batch
+    against serial rows instead — same invariance, different core."""
+    seed = 100 + SWEEP_COMBOS.index((mode, strategy, measure))
+    cases = _sweep_cases(engine_corpus, seed, CASES_PER_COMBO)
+    kw = dict(mode=mode, strategy=strategy, measure=measure, k=8)
+    if strategy == "drb" and mode == "or":
+        kw["df_cap"] = engine.suggested_df_cap(
+            [q for case in cases for q in case])
+    for case in cases:
+        batched = engine.search(case, mega=True, **kw)
+        if strategy == "dr":
+            # mega vs lockstep (vmapped heap core): full result, bitwise
+            lockstep = engine.search(case, mega=False, **kw)
+            for name in ("docs", "scores", "n_found", "work", "pops",
+                         "overflowed"):
+                np.testing.assert_array_equal(
+                    np.asarray(getattr(batched, name)),
+                    np.asarray(getattr(lockstep, name)), err_msg=name)
+        for b, q in enumerate(case):
+            serial = engine.search([q], mega=False, **kw)
+            for name in ("docs", "scores", "n_found"):
+                np.testing.assert_array_equal(
+                    np.asarray(getattr(batched, name)[b]),
+                    np.asarray(getattr(serial, name)[0]),
+                    err_msg=f"{name} row {b} of {case}")
+            if strategy == "dr":
+                assert int(batched.work[b]) == int(serial.work[0])
+                assert int(batched.pops[b]) == int(serial.pops[0])
+                assert not bool(np.asarray(serial.overflowed)[0])
+
+
+def test_mega_full_cap_never_overflows(engine, query_batch):
+    """cap = n_docs + 2 bounds the split-tree frontier: no mega query can
+    ever latch overflow at the default capacity."""
+    res = engine.search(query_batch, mode="or", strategy="dr", k=10,
+                        mega=True)
+    assert not np.asarray(res.overflowed).any()
+    assert np.asarray(res.n_found).min() > 0
+
+
+def test_mega_pool_overflow_latched_in_diagnostics():
+    """An undersized pool must DROP inserts and latch per-row ``overflowed``
+    — surfaced through SearchResults.diagnostics, mirroring the heap's
+    contract — never corrupt silently."""
+    cp = corpus.make_corpus(n_docs=12, mean_doc_len=20, vocab_size=60, seed=2)
+    eng = SearchEngine.build(cp, EngineConfig(block=512))
+    df = cp.doc_freqs()
+    pool = np.flatnonzero(df >= 4)
+    q = list(map(int, pool[pool >= 1][:3]))   # id 0 is the separator
+    eng._mega_cap = 2             # root fills slot 0: first split overflows
+    res = eng.search([q], mode="or", strategy="dr", k=5, mega=True)
+    d = res.diagnostics
+    assert d["overflowed"].any()
+
+
+def test_cross_q_bucket_bm25_drift_is_ulp_bounded(engine, mega_queries):
+    """The documented caveat: the SAME query scored in a different Q bucket
+    may drift by ~1 ulp (shape-dependent FMA in the BM25 reduction) — but
+    no more; and re-running at a MATCHED bucket is bitwise again, which is
+    exactly why the sweep above fixes the query length per combo."""
+    q3 = mega_queries[0]
+    pool = sorted(set(sum(mega_queries, [])))
+    heavy5 = [w for w in pool if w not in q3][:5]         # 5 words: bucket 8
+    kw = dict(mode="or", strategy="drb", measure="bm25", k=8,
+              df_cap=engine.suggested_df_cap([q3, heavy5]))
+    a = engine.search([q3, q3], **kw)                    # Q bucket 4
+    b = engine.search([q3, heavy5], **kw)                # Q bucket 8
+    ra, rb = np.asarray(a.scores)[0], np.asarray(b.scores)[0]
+    finite = np.isfinite(ra) & np.isfinite(rb)
+    ulp = np.spacing(np.maximum(np.abs(ra[finite]),
+                                np.abs(rb[finite])).astype(np.float32))
+    assert np.all(np.abs(ra[finite] - rb[finite]) <= 4 * ulp)
+    assert int(a.n_found[0]) == int(b.n_found[0])
+    # matched bucket, different batch-mates: bitwise, not just close
+    c = engine.search([q3, mega_queries[3]], **kw)
+    np.testing.assert_array_equal(np.asarray(a.docs)[0], np.asarray(c.docs)[0])
+    np.testing.assert_array_equal(ra, np.asarray(c.scores)[0])
+
+
+# ---------------------------------------------------------------------------
+# admission layer: work buckets, heavy lane, starvation bound, adaptive wait
+# ---------------------------------------------------------------------------
+
+def test_work_bucket_factor8_boundaries():
+    assert [work_bucket(w) for w in (0, 1, 7, 8, 63, 64, 511, 512)] \
+        == [0, 0, 0, 1, 1, 2, 2, 3]
+
+
+def _scripted_batcher(entries, **kw):
+    src = queue.Queue()
+    for e in entries:
+        src.put(e)
+    return MicroBatcher(src.get, **kw)
+
+
+def test_batcher_coalesces_only_within_lane():
+    P = QueryProfile()
+    A, B = Lane(bucket=0), Lane(bucket=1)
+    mb = _scripted_batcher([([1], P, "a1", 0.0, A), ([2], P, "b1", 0.0, B),
+                            ([3], P, "a2", 0.0, A), ([4], P, "a3", 0.0, A)],
+                           max_batch=8, max_wait_ms=0.0)
+    first = mb.next_batch()
+    assert first.items == ["a1", "a2", "a3"] and first.lane == A
+    second = mb.next_batch()
+    assert second.items == ["b1"] and second.lane == B
+
+
+def test_heavy_lane_cap1_never_coalesces():
+    """cap=1 isolates heavy queries even from EACH OTHER — same profile,
+    same lane, still one per batch."""
+    P = QueryProfile()
+    heavy = Lane(bucket=4, cap=1)
+    mb = _scripted_batcher([([9], P, i, 0.0, heavy) for i in range(3)],
+                           max_batch=8, max_wait_ms=0.0)
+    sizes = [mb.next_batch().n_real for _ in range(3)]
+    assert sizes == [1, 1, 1]
+
+
+def test_starvation_bound_oldest_request_leads():
+    """The batch always forms around the OLDEST pending request: a heavy
+    cap=1 head dispatches alone immediately — lane isolation can reorder
+    batch membership but never starve the head of the queue."""
+    P = QueryProfile()
+    heavy, light = Lane(bucket=4, cap=1), Lane(bucket=0)
+    mb = _scripted_batcher(
+        [([9], P, "H", 0.0, heavy)] + [([1], P, f"L{i}", 0.0, light)
+                                       for i in range(3)],
+        max_batch=8, max_wait_ms=0.0)
+    assert mb.next_batch().items == ["H"]
+    assert mb.next_batch().items == ["L0", "L1", "L2"]
+
+
+def test_adaptive_wait_tracks_arrival_ewma():
+    """EWMA inter-arrival gap: idle stream -> wait collapses to 0 (a lone
+    query pays no coalescing tax); bursty stream -> full max_wait again.
+    Also covers lane-less 4-tuple producers (normalized to DEFAULT_LANE)."""
+    P = QueryProfile()
+    src = queue.Queue()
+    for i in range(40):
+        src.put(([1], P, i, 0.0))            # 4-tuples: lane-less producer
+    t = [0.0]
+    mb = MicroBatcher(src.get, max_batch=64, max_wait_ms=10.0,
+                      adaptive_wait=True, clock=lambda: t[0])
+    assert mb.effective_wait() == 0.010      # no signal yet: full budget
+    for _ in range(3):                       # sparse: 1s gaps >> max_wait
+        t[0] += 1.0
+        assert mb._pull(0.0)
+    assert mb.effective_wait() == 0.0
+    assert mb._pending[0][4] == DEFAULT_LANE
+    for _ in range(30):                      # burst: gaps ~0 << max_wait
+        t[0] += 1e-4
+        assert mb._pull(0.0)
+    assert mb.effective_wait() == 0.010
+
+
+def _df_dummy_engine(delay_s=0.0):
+    """Dummy engine exposing the df surface the admission predictor reads:
+    word 10 is heavy (df 400 >= heavy_df = 2 * n_docs = 100), all others
+    light (df 2)."""
+    V = 64
+    df = np.full(V, 2, np.int64)
+    df[10] = 400
+
+    def search(queries, **kw):
+        if delay_s:
+            time.sleep(delay_s)
+        B, k = len(queries), kw.get("k") or 3
+        return types.SimpleNamespace(
+            docs=np.tile(np.arange(k, dtype=np.int32), (B, 1)),
+            scores=np.zeros((B, k), np.float32),
+            n_found=np.full(B, k, np.int32), work=np.ones(B, np.int32),
+            pops=None, overflowed=None, match_pos=None, match_len=None,
+            k=k, mode=kw.get("mode", "and"), strategy="dr", measure="tfidf")
+
+    return types.SimpleNamespace(
+        search=search,
+        model=types.SimpleNamespace(vocab_size=V,
+                                    rank_of_word=np.arange(V)),
+        _df_np=df, n_docs=50,
+        stats={"executors": 0, "traces": {}},
+        warmup=lambda *a, **kw: 0)
+
+
+def test_server_isolates_predicted_heavy_queries():
+    """End-to-end admission: under a burst, light queries coalesce while
+    df-predicted-heavy ones run at batch size 1, never taxing batch-mates."""
+    eng = _df_dummy_engine(delay_s=0.03)
+    with SearchServer(eng, max_batch=8, max_wait_ms=5.0, queue_depth=64,
+                      cache_size=0, work_buckets=True) as server:
+        warm = server.submit([1, 2, 3])      # occupies the dispatch thread
+        lights = [server.submit([1 + i % 5, 2, 3]) for i in range(6)]
+        heavies = [server.submit([10]) for _ in range(2)]
+        for t in [warm, *lights, *heavies]:
+            t.result(timeout=10.0)
+        assert all(t.batch_size == 1 for t in heavies)
+        assert max(t.batch_size for t in lights) > 1
+        assert server.stats["served"] == 9
+
+
+# ---------------------------------------------------------------------------
+# serving layer: bitwise pins through every frontend feature
+# ---------------------------------------------------------------------------
+
+def test_server_mega_lanes_cache_bitwise(engine, mega_queries):
+    """The full serving stack at once — mega executor, work buckets,
+    adaptive wait, result cache — answers bitwise equal to direct serial
+    ``engine.search`` (classical core), and the cache replays identically."""
+    profile = QueryProfile(mode="or", strategy="dr", measure="tfidf", k=6,
+                           mega=True)
+    server = SearchServer(engine, max_batch=4, max_wait_ms=2.0,
+                          cache_size=64, work_buckets=True,
+                          adaptive_wait=True)
+    server.warmup(mega_queries, profile)
+    with server:
+        tickets = [server.submit(q, profile) for q in mega_queries]
+        rows = [t.result(timeout=120.0) for t in tickets]
+        for q, row in zip(mega_queries, rows):
+            _row_equals(row, engine.search([q], mode="or", strategy="dr",
+                                           measure="tfidf", k=6, mega=False))
+        replay = server.submit(mega_queries[0], profile)
+        assert replay.cache_hit
+        _row_equals(replay.result(), engine.search(
+            [mega_queries[0]], mode="or", strategy="dr", k=6, mega=False))
+
+
+def test_swap_engine_retags_cache_and_answers(engine, engine_b, mega_queries):
+    """drain -> swap -> clear: pre-swap answers come from (and match) the
+    old engine; a post-swap identical query MISSES the version-tagged cache
+    and answers bitwise from the new engine."""
+    assert engine.content_tag != engine_b.content_tag
+    profile = QueryProfile(mode="and", strategy="dr", k=5)
+    q = mega_queries[0]
+    with SearchServer(engine, max_batch=4, cache_size=64) as server:
+        r_old = server.search(q, profile)
+        assert server.submit(q, profile).cache_hit
+        old = server.swap_engine(engine_b)
+        assert old is engine
+        st_ = server.stats
+        assert st_["swaps"] == 1 and st_["engine_tag"] == engine_b.content_tag
+        t = server.submit(q, profile)
+        assert not t.cache_hit               # tagged key cannot cross engines
+        _row_equals(t.result(timeout=120.0),
+                    engine_b.search([q], mode="and", strategy="dr", k=5))
+    _row_equals(r_old, engine.search([q], mode="and", strategy="dr", k=5))
+
+
+def test_swap_engine_drains_inflight_sheds_new():
+    """Concurrency contract: a request in flight when the swap starts
+    completes against the OLD engine; admissions during the drain shed;
+    the first post-swap request answers from the new engine."""
+    old_eng, new_eng = _df_dummy_engine(delay_s=0.3), _df_dummy_engine()
+    new_eng.search = lambda queries, **kw: types.SimpleNamespace(
+        docs=np.full((len(queries), 3), 7, np.int32),
+        scores=np.full((len(queries), 3), 2.0, np.float32),
+        n_found=np.full(len(queries), 3, np.int32),
+        work=np.ones(len(queries), np.int32),
+        pops=None, overflowed=None, match_pos=None, match_len=None,
+        k=3, mode="and", strategy="dr", measure="tfidf")
+    old_eng.content_tag, new_eng.content_tag = 111, 222
+    with SearchServer(old_eng, max_batch=1, max_wait_ms=0.0,
+                      cache_size=0) as server:
+        inflight = server.submit([1])
+        deadline = time.monotonic() + 5.0
+        while inflight.t_dispatch is None:   # wait until it's on the engine
+            assert time.monotonic() < deadline
+            time.sleep(0.001)
+        swapped = []
+        th = threading.Thread(
+            target=lambda: swapped.append(server.swap_engine(new_eng)))
+        th.start()
+        while not server._draining:          # drain must engage (>= 0.3s)
+            assert time.monotonic() < deadline
+            time.sleep(0.001)
+        with pytest.raises(ShedError, match="drain"):
+            server.submit([2])
+        th.join(timeout=10.0)
+        assert swapped == [old_eng]
+        assert np.all(inflight.result().scores == 0.0)   # old engine's answer
+        assert np.all(server.search([3]).scores == 2.0)  # new engine's answer
+        assert server.stats["shed"] == 1
+
+
+def test_snapshot_restore_serves_mega_bitwise(engine, mega_queries, tmp_path):
+    """Snapshot round-trip preserves the content tag AND the mega path:
+    a restored engine's mega batch equals the live engine's, bitwise."""
+    snapshot.save(engine, tmp_path)
+    restored = snapshot.load(tmp_path)
+    assert restored.content_tag == engine.content_tag
+    batch = mega_queries[:4]
+    a = engine.search(batch, mode="or", strategy="dr", k=6, mega=True)
+    b = restored.search(batch, mode="or", strategy="dr", k=6, mega=True)
+    for name in ("docs", "scores", "n_found", "work", "pops", "overflowed"):
+        np.testing.assert_array_equal(np.asarray(getattr(a, name)),
+                                      np.asarray(getattr(b, name)),
+                                      err_msg=name)
+
+
+def test_snapshot_device_put_is_zero_copy(tmp_path):
+    """CPU backend: ``_device_put`` must ALIAS the mmap'd .npy pages (the
+    64-byte-aligned payload), not copy them — boot stays O(metadata)."""
+    if jax.default_backend() != "cpu":
+        pytest.skip("zero-copy aliasing is a CPU-backend contract")
+    arr = np.arange(4096, dtype=np.int32)
+    np.save(tmp_path / "a.npy", arr)
+    m = np.load(tmp_path / "a.npy", mmap_mode="r")
+    dev = snapshot._device_put({"a": m})["a"]
+    try:
+        dev_ptr = dev.unsafe_buffer_pointer()
+    except (AttributeError, NotImplementedError):  # pragma: no cover
+        pytest.skip("backend exposes no buffer pointer")
+    assert dev_ptr == m.ctypes.data              # same pages, no copy
+    np.testing.assert_array_equal(np.asarray(dev), arr)
