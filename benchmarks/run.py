@@ -6,7 +6,7 @@
 Prints ``name,us_per_call,derived`` CSV rows (the harness contract).
 ``--json PATH`` additionally writes the rows as a machine-readable artifact
 (``{"bench": {name: us_per_call}, "beam_sweep": {...}, "serving": {...},
-"megabatch": {...}}`` — the BENCH_PR7.json artifact that carries the perf
+"megabatch": {...}}`` — the BENCH_PR8.json artifact that carries the perf
 trajectory; beam-sweep entries hold iters/pops ratios vs P=1, serving
 entries the table 6 throughput/percentile/cache metrics, megabatch entries
 the table 7 skew/heavy-band tail latencies for mega vs lockstep vs

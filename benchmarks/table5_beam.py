@@ -10,7 +10,18 @@ For each (mode, beam_width) cell the sweep reports
 * ``pops``       — segments actually popped; ``pop_overhead`` = pops(P) /
   pops(1) is the price of the beam (extra expansions the one-pop order
   would have avoided),
-* ``iters_ratio`` = iters(1) / iters(P) — the recorded work-metric win.
+* ``iters_ratio`` = iters(1) / iters(P) — the recorded work-metric win,
+* ``padded``     — dead beam lanes popped (frontier smaller than the active
+  bucket); ``pad_frac`` = padded / (pops + padded) is the wasted-descent
+  share the active-frontier buckets (core/ranked.py) are meant to crush,
+* a roofline attachment (``analysis/roofline.py`` WTBC query-path model):
+  ``bytes_per_query`` from levels x 2 ranks x Q x (tile + counter) traffic x
+  (pops + padded), and ``roofline_frac`` = memory-bound floor / measured —
+  how close the cell runs to the backend's bandwidth roofline.
+
+A ``DRmega_*`` row benches the same queries through the pool-frontier
+megabatch core (``mega=True``) — the path the fused device-resident beam
+step (kernels/beam_step.py) replaces trip-for-trip under a gpu lowering.
 
 The sharded sweep runs the same queries over a simulated 4-device mesh in a
 subprocess (XLA locks the device count at first init, like
@@ -26,6 +37,9 @@ import textwrap
 import numpy as np
 
 from benchmarks import common
+from repro.analysis import roofline
+from repro.engine.facade import pow2_bucket
+from repro.kernels import backend as kernel_backend
 from repro.text import corpus
 
 BEAMS = (1, 4, 16, 64)
@@ -66,6 +80,24 @@ def run(bench: common.Bench | None = None, *, beams=BEAMS, n_queries: int = 16,
     qs = corpus.sample_queries(df, bands["ii"], n_queries, n_words, seed=5)
     results = {}
 
+    qb = pow2_bucket(n_words)
+    backend = kernel_backend.canonical_backend()
+    block = b.engine.config.block
+
+    def attach_roofline(rec: dict, us: float, pops: int, padded: int) -> str:
+        rl = roofline.wtbc_query_roofline(
+            backend=backend, measured_us_per_query=us,
+            pops=pops / n_queries, padded=padded / n_queries,
+            q=qb, block=block)
+        rec.update(padded=padded,
+                   pad_frac=padded / max(pops + padded, 1),
+                   bytes_per_query=rl.bytes_per_query,
+                   roofline_model_us=rl.model_us_per_query,
+                   roofline_frac=rl.achieved_frac,
+                   roofline_backend=backend)
+        return (f"padded={padded};bytes/q={rl.bytes_per_query:.3g};"
+                f"rl_frac={rl.achieved_frac:.4f}")
+
     cells = [("DR", m, "dr", "tfidf") for m in ("and", "or")]
     cells += [("DRB", "and", "drb", "bm25")]
     for tag, mode, strategy, measure in cells:
@@ -78,17 +110,36 @@ def run(bench: common.Bench | None = None, *, beams=BEAMS, n_queries: int = 16,
             d = fn().diagnostics
             iters = int(np.sum(d["work"]))
             pops = int(np.sum(d["pops"]))
+            padded = int(np.sum(d["padded"])) if "padded" in d else 0
             if P == beams[0]:
                 base_iters, base_pops = max(iters, 1), max(pops, 1)
             us = dt / n_queries * 1e6
             name = f"table5/{tag}_{mode}_P{P}"
-            derived = (f"iters={iters};pops={pops};"
-                       f"iters_ratio={base_iters / max(iters, 1):.2f};"
-                       f"pop_overhead={pops / base_pops:.2f}")
             results[name] = {"us_per_call": us, "iters": iters, "pops": pops,
                              "iters_ratio_vs_P1": base_iters / max(iters, 1),
                              "pop_overhead_vs_P1": pops / base_pops}
+            rl_str = attach_roofline(results[name], us, pops, padded)
+            derived = (f"iters={iters};pops={pops};"
+                       f"iters_ratio={base_iters / max(iters, 1):.2f};"
+                       f"pop_overhead={pops / base_pops:.2f};{rl_str}")
             print_rows(common.csv_row(name, us, derived))
+
+    # pool-frontier megabatch core (DESIGN.md §8) — the path the fused
+    # device-resident beam step replaces trip-for-trip on a gpu lowering
+    for mode in ("and", "or"):
+        fn = lambda: b.engine.search(qs, k=k, mode=mode, strategy="dr",
+                                     measure="tfidf", mega=True)
+        dt = common.time_fn(lambda: fn().scores)
+        d = fn().diagnostics
+        iters = int(np.sum(d["work"]))
+        pops = int(np.sum(d["pops"]))
+        padded = int(np.sum(d["padded"])) if "padded" in d else 0
+        us = dt / n_queries * 1e6
+        name = f"table5/DRmega_{mode}"
+        results[name] = {"us_per_call": us, "iters": iters, "pops": pops}
+        rl_str = attach_roofline(results[name], us, pops, padded)
+        print_rows(common.csv_row(name, us,
+                                  f"iters={iters};pops={pops};{rl_str}"))
 
     if with_sharded:
         env = dict(os.environ)

@@ -19,6 +19,14 @@ MODEL_FLOPS (the "useful work" numerator for the compute-fraction score) is
 analytic: 6·N·T for dense-LM training (6·N_active·T for MoE) plus exact
 attention-window terms, 2·N·T for inference; per-tower closed forms for
 recsys; per-layer closed forms for EGNN.
+
+**WTBC query-path model** (ISSUE 8, DESIGN.md §9): the search loop is pure
+memory traffic — every rank probe reads one counter-block tile plus a
+counter entry, and Algorithm 1 issues ``2 ranks × levels × Q`` probes per
+popped (or padded) beam lane.  ``wtbc_query_roofline`` turns measured
+pops/padded/latency into bytes/query and an achieved-fraction-of-peak
+against the backend's memory bandwidth — the number benchmarks/table5 and
+BENCH_PR8.json report next to each beam cell.
 """
 from __future__ import annotations
 
@@ -235,6 +243,77 @@ def markdown_table(rows: list[CellRoofline]) -> str:
             f"{r.roofline_fraction():.3f} | "
             f"{'' if r.peak_mem_gb is None else f'{r.peak_mem_gb:.1f}'} |")
     return hdr + "\n".join(lines)
+
+
+# ---------------------------------------------------------------------------
+# WTBC query-path roofline (DESIGN.md §9)
+# ---------------------------------------------------------------------------
+
+# Memory bandwidth floor per canonical kernel backend.  The TPU number is the
+# v5e HBM constant the training-cell roofline above already uses; the GPU
+# number is an A100-class 2 TB/s; "cpu" is a DDR5-ish 41 GB/s single-socket
+# stream bandwidth — deliberately conservative so the achieved fraction on the
+# CI interpret path reads as an upper bound, not a brag.
+WTBC_MEM_BW: dict[str, float] = {
+    "tpu": HBM_BW,
+    "gpu": 2.0e12,
+    "cpu": 4.1e10,
+}
+
+# Per-rank counter traffic: the TPU lowering DMAs the whole (1, 256) int32
+# superblock counter row next to each tile; the GPU/ref lowerings gather one
+# 4-byte entry.
+WTBC_COUNTER_BYTES: dict[str, float] = {"tpu": 256 * 4.0, "gpu": 4.0,
+                                        "cpu": 4.0}
+
+
+def wtbc_query_bytes(*, pops: float, padded: float, q: int, block: int,
+                     levels: int = 3,
+                     counter_bytes: float = 4.0) -> float:
+    """Bytes the WTBC query path must move per query.
+
+    Every popped beam lane (plus every padded dead lane — the hardware reads
+    for those too, which is exactly why table5 tracks pad waste) descends all
+    ``levels`` of the wavelet tree for each of the ``q`` query words, and each
+    level's ``count_range`` issues 2 rank probes.  A probe touches one
+    ``block``-byte counter-block tile plus ``counter_bytes`` of superblock
+    counters; the tiny node-offset/codeword tables are shared across probes
+    and amortize to ~0.
+    """
+    ranks = 2.0 * levels * q * (pops + padded)
+    return ranks * (block + counter_bytes)
+
+
+@dataclasses.dataclass
+class WTBCQueryRoofline:
+    """Memory-roofline attachment for one table5 beam cell."""
+    backend: str                  # canonical kernel backend the BW came from
+    bytes_per_query: float
+    model_us_per_query: float     # bytes / BW — the memory-bound floor
+    measured_us_per_query: float
+    achieved_frac: float          # model / measured; 1.0 = at the roofline,
+                                  # small values = launch/loop overhead bound
+
+
+def wtbc_query_roofline(*, backend: str, measured_us_per_query: float,
+                        pops: float, padded: float, q: int, block: int,
+                        levels: int = 3) -> WTBCQueryRoofline:
+    """Attach the bytes/query model to a measured per-query latency.
+
+    ``pops``/``padded`` are per-query means (floats are fine); ``backend`` is
+    ``kernels.backend.canonical_backend()`` — it picks both the bandwidth
+    floor and the counter-traffic shape.
+    """
+    cb = WTBC_COUNTER_BYTES.get(backend, 4.0)
+    bpq = wtbc_query_bytes(pops=pops, padded=padded, q=q, block=block,
+                           levels=levels, counter_bytes=cb)
+    bw = WTBC_MEM_BW.get(backend, WTBC_MEM_BW["cpu"])
+    model_us = bpq / bw * 1e6
+    frac = model_us / max(measured_us_per_query, 1e-9)
+    return WTBCQueryRoofline(backend=backend, bytes_per_query=bpq,
+                             model_us_per_query=model_us,
+                             measured_us_per_query=measured_us_per_query,
+                             achieved_frac=frac)
 
 
 def main():

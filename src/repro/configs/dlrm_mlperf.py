@@ -1,4 +1,11 @@
-"""dlrm-mlperf [arXiv:1906.00091]: MLPerf DLRM benchmark config (Criteo 1TB):
+"""NON-WTBC FIXTURE (seed-era assigned architecture, not the paper system).
+
+Kept solely as a dry-run/roofline harness fixture (``launch/dryrun.py`` mesh
+sweeps, ``analysis/roofline.py`` cell tables); nothing in the WTBC retrieval
+stack (engine / kernels / serve) imports it.  Do not grow — retrieval work
+belongs in ``wtbc_paper.py``.
+
+dlrm-mlperf [arXiv:1906.00091]: MLPerf DLRM benchmark config (Criteo 1TB):
 13 dense + 26 sparse features with the published per-feature cardinalities,
 embed 128, bottom MLP 13-512-256-128, dot interaction, top MLP
 1024-1024-512-256-1."""

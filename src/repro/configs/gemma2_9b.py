@@ -1,4 +1,11 @@
-"""gemma2-9b: 42L d3584 16H (GQA kv=8, head 256) d_ff 14336, vocab 256000,
+"""NON-WTBC FIXTURE (seed-era assigned architecture, not the paper system).
+
+Kept solely as a dry-run/roofline harness fixture (``launch/dryrun.py`` mesh
+sweeps, ``analysis/roofline.py`` cell tables); nothing in the WTBC retrieval
+stack (engine / kernels / serve) imports it.  Do not grow — retrieval work
+belongs in ``wtbc_paper.py``.
+
+gemma2-9b: 42L d3584 16H (GQA kv=8, head 256) d_ff 14336, vocab 256000,
 alternating local(4096)/global attention, attn softcap 50, final softcap 30,
 post-block norms.  [arXiv:2408.00118]"""
 import jax.numpy as jnp

@@ -1,4 +1,11 @@
-"""llama4-scout-17b-16e: 48L d5120 40H (GQA kv=8, head 128) d_ff 8192,
+"""NON-WTBC FIXTURE (seed-era assigned architecture, not the paper system).
+
+Kept solely as a dry-run/roofline harness fixture (``launch/dryrun.py`` mesh
+sweeps, ``analysis/roofline.py`` cell tables); nothing in the WTBC retrieval
+stack (engine / kernels / serve) imports it.  Do not grow — retrieval work
+belongs in ``wtbc_paper.py``.
+
+llama4-scout-17b-16e: 48L d5120 40H (GQA kv=8, head 128) d_ff 8192,
 vocab 202048, MoE 16 experts top-1 + 1 shared; iRoPE attention — 3 of 4
 layers chunked-local (8192), 1 of 4 global with NoPE.  40 heads do not divide
 model=16, so attention heads replicate (rules override).  [hf:meta-llama]"""

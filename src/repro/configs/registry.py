@@ -1,4 +1,12 @@
-"""--arch registry: the 10 assigned architectures + the paper's own system."""
+"""--arch registry: the 10 assigned architectures + the paper's own system.
+
+The assigned (non-``wtbc``) entries are seed-era dry-run/roofline fixtures —
+they exist so ``launch/dryrun.py`` and the cell-roofline tables have model
+shapes to sweep, and are NOT part of the paper's retrieval stack.  Three are
+explicitly marked dead in their module docstrings (``gemma2_9b``,
+``llama4_scout_17b_a16e``, ``dlrm_mlperf``): kept for the harness, frozen
+otherwise.
+"""
 from __future__ import annotations
 
 from repro.configs import (dlrm_mlperf, egnn, fm, gemma2_9b, granite_3_8b,

@@ -262,7 +262,18 @@ def distributed_topk(sharded: ShardedWTBC, words: jnp.ndarray, wmask: jnp.ndarra
             raise ValueError(method)
 
         if batched:
-            res = jax.vmap(one)(words, wmask)         # leaves (B, k)
+            if method in ("dr-and", "dr-or"):
+                # the explicitly batched core, NOT vmap(one): under vmap the
+                # active-frontier lax.switch index is batched, which executes
+                # EVERY bucket body per trip and selects; topk_dr_batch
+                # hoists a scalar dispatch above the vmapped row body
+                # (bitwise-equal leaves — see core/ranked.py)
+                res = ranked.topk_dr_batch(
+                    idx, words, wmask, idf_tab, k=k,
+                    conjunctive=(method == "dr-and"), heap_cap=heap_cap,
+                    max_pops=max_pops, beam_width=beam_width)
+            else:
+                res = jax.vmap(one)(words, wmask)     # leaves (B, k)
         else:
             res = one(words, wmask)
         gdocs = jnp.where(res.docs >= 0, res.docs + sh.doc_base[0], -1)

@@ -172,11 +172,11 @@ def topk_drb_and(idx: WTBCIndex, aux: DRBAux, words: jnp.ndarray,
     topk0 = H.topk_make(k)
 
     def cond(st):
-        p, nd, topk, it, cands = st
+        p, nd, topk, it, cands, padded = st
         return (jnp.min(nd) > 0) & jnp.any(valid) & ~absent & (it < idx.n_docs + 1)
 
     def body(st):
-        p, nd, topk, it, cands = st
+        p, nd, topk, it, cands, padded = st
         qstar = jnp.argmin(jnp.where(valid, nd, INT32_MAX))
         wstar = words[qstar]
         occ_star = idx.occ[wstar]
@@ -217,15 +217,20 @@ def topk_drb_and(idx: WTBCIndex, aux: DRBAux, words: jnp.ndarray,
         p_new = jnp.where(valid, cnt_last, p)
         nd_new = jax.vmap(lambda w_, c_: word_rank1(aux, w_, c_))(words, cnt_last)
         nd_new = jnp.where(valid, df_w - nd_new, INT32_MAX)
+        # pad-waste: beam lanes past the rarest word's posting-list end
+        # still paid their locate + descent (SearchResults.diagnostics)
         return (p_new, nd_new, topk, it + 1,
-                cands + jnp.sum(new_j.astype(jnp.int32)))
+                cands + jnp.sum(new_j.astype(jnp.int32)),
+                padded + jnp.sum((~valid_j).astype(jnp.int32)))
 
-    p, nd, topk, iters, cands = jax.lax.while_loop(
-        cond, body, (p0, nd0, topk0, jnp.int32(0), jnp.int32(0)))
+    p, nd, topk, iters, cands, padded = jax.lax.while_loop(
+        cond, body, (p0, nd0, topk0, jnp.int32(0), jnp.int32(0),
+                     jnp.int32(0)))
     res = H.topk_sorted(topk)
     found = jnp.sum(res.scores > -jnp.inf).astype(jnp.int32)
     return DRResult(jnp.where(res.scores > -jnp.inf, res.docs, -1),
-                    res.scores, found, iters, cands, jnp.zeros((), bool))
+                    res.scores, found, iters, cands, jnp.zeros((), bool),
+                    padded)
 
 
 # ---------------------------------------------------------------------------

@@ -67,10 +67,12 @@ def _pool_insert(pool, s, d0, d1, tf, enable, overflowed):
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("k", "conjunctive", "cap", "max_pops"))
+                   static_argnames=("k", "conjunctive", "cap", "max_pops",
+                                    "fused"))
 def topk_dr_mega(idx: WTBCIndex, words: jnp.ndarray, wmask: jnp.ndarray,
                  idf: jnp.ndarray, *, k: int, conjunctive: bool,
-                 cap: int, max_pops: int | None = None) -> DRResult:
+                 cap: int, max_pops: int | None = None,
+                 fused: str | None = None) -> DRResult:
     """Pool-frontier Algorithm 1 over a whole batch: ``words``/``wmask`` are
     (B, Q); returns a ``DRResult`` with (B,) / (B, k) leaves, row-for-row
     bitwise equal to ``topk_dr_batch(..., beam_width=1)`` at the same shapes
@@ -79,6 +81,12 @@ def topk_dr_mega(idx: WTBCIndex, words: jnp.ndarray, wmask: jnp.ndarray,
     ``max_pops`` is the per-row any-time budget; rows stop independently, so
     a straggler row never holds finished rows' results hostage — only the
     loop trip count, which is the max over rows either way.
+
+    ``fused`` selects the device-resident loop body: ``None`` runs the jnp
+    body below; ``"gpu"`` / ``"gpu:interpret"`` replace the whole trip —
+    pop, descent, score, push — with ONE ``kernels/beam_step`` launch
+    (bitwise-equal by construction and pinned by tests/test_beam_fused.py).
+    Resolve the plan OUTSIDE jit (``backend.descent_plan().tag``).
     """
     B, Q = words.shape
     idf_w = jnp.where(wmask, idf[words], 0.0).astype(jnp.float32)
@@ -171,6 +179,20 @@ def topk_dr_mega(idx: WTBCIndex, words: jnp.ndarray, wmask: jnp.ndarray,
         return (pool, out_docs, out_scores, n_out,
                 iters + active.astype(jnp.int32),
                 pops + active.astype(jnp.int32), overflowed)
+
+    if fused is not None:
+        if not fused.startswith("gpu"):
+            raise ValueError(f"fused beam step has a gpu/interpret lowering "
+                             f"only, got {fused!r}")
+        from repro.kernels import beam_step
+
+        def body(st):  # noqa: F811 — the fused replacement of the jnp trip
+            pool, out_docs, out_scores, n_out, iters, pops, overflowed = st
+            return beam_step.fused_beam_step(
+                idx, words, wmask, idf_w, pool, out_docs, out_scores,
+                n_out, iters, pops, overflowed, k=k, conjunctive=conjunctive,
+                cap=cap, max_pops=max_pops,
+                interpret=fused.endswith(":interpret"))
 
     st0 = (pool, out_docs, out_scores, jnp.zeros((B,), jnp.int32),
            jnp.zeros((B,), jnp.int32), jnp.zeros((B,), jnp.int32),

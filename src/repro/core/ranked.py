@@ -37,7 +37,26 @@ larger P trades a few extra segment expansions for P-wide memory-level
 parallelism in the rank workload — the compact-top-k batching lever of
 Konow & Navarro's "Faster Compact Top-k Document Retrieval".
 
-The full search is one jitted ``lax.while_loop``; batched queries via ``vmap``.
+**Active-frontier buckets** (this file's padding fix, DESIGN.md §9): a beam
+trip at configured width P used to descend P×Q rank rows even when the heap
+held a single live segment — at P=64 that made most of the descent traffic
+dead padding (BENCH_PR7's 11 ms/call pathology).  Each trip now dispatches
+on the *live* frontier width ``min(heap.size, P)`` through a
+``lax.switch`` over pow2-bucketed loop bodies (1, 2, 4, …, P), so the
+descent batch is sized to the work that exists.  Bucketing is bitwise
+inert: ``pop_p`` pops come out as a valid-prefix in the total lex order, a
+bucket S always satisfies ``min(size, P) <= S <= P`` (so the popped *set*
+per trip is identical at any bucket), and dead lanes never emit or push.
+The batched entry point ``topk_dr_batch`` runs one explicitly batched loop
+with a *scalar* bucket index (max live width across the batch) — under
+``vmap`` a batched switch index would execute every branch and select,
+erasing the win, so the switch must stay unbatched.  Pad-waste (dead pop
+lanes descended) is surfaced as ``DRResult.padded`` →
+``SearchResults.diagnostics``.
+
+The full search is one jitted ``lax.while_loop`` per query row; batched
+queries share one loop whose trip count is the max over rows (finished rows
+are mask-frozen exactly as ``vmap`` of a ``while_loop`` would).
 """
 from __future__ import annotations
 
@@ -63,6 +82,11 @@ class DRResult(NamedTuple):
     # () bool — a heap push was dropped at capacity: the ranking may be
     # inexact and the caller must not trust it silently (DESIGN.md §6)
     overflowed: jnp.ndarray | None = None
+    # () int32 — dead pop lanes whose descent rows were still computed
+    # (pad-waste): pops + padded = beam lanes processed.  The active-frontier
+    # buckets keep this near zero; None on cores without beam padding (mega,
+    # brute force, sharded merge).
+    padded: jnp.ndarray | None = None
 
 
 def count_words_range(idx: WTBCIndex, words: jnp.ndarray,
@@ -74,6 +98,143 @@ def count_words_range(idx: WTBCIndex, words: jnp.ndarray,
     Q = words.shape[0]
     return wtbc.count_range_batch(idx, words, jnp.broadcast_to(lo, (Q,)),
                                   jnp.broadcast_to(hi, (Q,)))
+
+
+def _frontier_buckets(P: int) -> tuple[int, ...]:
+    """Pow2 frontier-width buckets 1, 2, 4, …, capped by (and always
+    including) the configured beam width P."""
+    ws = []
+    w = 1
+    while w < P:
+        ws.append(w)
+        w *= 2
+    ws.append(P)
+    return tuple(ws)
+
+
+def _tree_select(mask, new, old):
+    """Per-row freeze: where ``mask`` (B,) is False, keep ``old`` — the same
+    per-row select ``vmap`` of a ``while_loop`` lowers its body to."""
+    def sel(a, b):
+        m = mask.reshape(mask.shape + (1,) * (a.ndim - mask.ndim))
+        return jnp.where(m, a, b)
+    return jax.tree.map(sel, new, old)
+
+
+def _dr_row_init(idx, words, wmask, idf_w, *, k, conjunctive, heap_cap):
+    """Per-row loop state: (heap, out_docs, out_scores, n_out, it, pops,
+    padded).  ``words``/``wmask``/``idf_w`` are one query row (Q,)."""
+    Q = words.shape[0]
+    n_docs = idx.n_docs
+    lo0, hi0 = wtbc.segment_extent(idx, jnp.int32(0), n_docs)
+    tf0 = count_words_range(idx, words, lo0, hi0) * wmask
+    score0 = tf0.astype(jnp.float32) @ idf_w
+    if conjunctive:
+        en0 = jnp.all((tf0 > 0) | ~wmask, axis=-1) & jnp.any(wmask)
+    else:
+        en0 = score0 > 0.0
+    pay0 = jnp.concatenate([jnp.stack([jnp.int32(0), n_docs]), tf0])
+    hp = H.make(heap_cap, 2 + Q)
+    hp = H.push(hp, score0, pay0, en0)
+    # emission order is already globally sorted; track an explicit write
+    # cursor.  Slot k is a trash slot for beam emissions past the k budget.
+    out_docs = jnp.full((k + 1,), -1, jnp.int32)
+    out_scores = jnp.full((k + 1,), -jnp.inf, jnp.float32)
+    return (hp, out_docs, out_scores, jnp.int32(0), jnp.int32(0),
+            jnp.int32(0), jnp.int32(0))
+
+
+def _dr_row_cond(st, *, k, max_pops):
+    hp, _, _, n_out, _, pops, _ = st
+    ok = (n_out < k) & (hp.size > 0)
+    if max_pops is not None:
+        ok = ok & (pops < max_pops)
+    return ok
+
+
+def _dr_row_body(st, words, wmask, idf_w, *, idx, S, k, conjunctive):
+    """One beam trip of one query row at (bucketed) frontier width ``S``.
+
+    Bitwise-identical to running the trip at any width in [min(size, P), P]:
+    pops come out as a valid-prefix in the total lex order, and dead lanes
+    (valid False) neither emit nor push — only ``padded`` sees them.
+    """
+    hp, out_docs, out_scores, n_out, it, pops, padded = st
+    Q = words.shape[0]
+
+    def seg_score(tf):
+        # (..., Q) int32 -> (...,) float32; matvec == the one-pop jnp.dot
+        return tf.astype(jnp.float32) @ idf_w
+
+    def seg_valid(tf, score):
+        if conjunctive:
+            return jnp.all((tf > 0) | ~wmask, axis=-1) & jnp.any(wmask)
+        return score > 0.0
+
+    s_p, pay, valid, hp = H.pop_p(hp, S)          # scores descending
+    d0, d1, tf = pay[:, 0], pay[:, 1], pay[:, 2:]
+    single = valid & ((d1 - d0) == 1)
+    multi = valid & ~single
+
+    # exact-emission bound: everything still pending is lex-bounded by
+    # the heap top after the S pops and the popped multis' own keys — a
+    # segment's key (score desc, d0 asc, d1 desc) strictly bounds every
+    # descendant's (score is monotone over concatenation; on score ties
+    # a left child keeps d0 but shrinks d1, a right child grows d0).  A
+    # popped singleton that lex-beats the bound is the globally next
+    # answer *including tie order*, so the emission sequence is the same
+    # for every beam width; the rest go back into the heap.
+    cs = jnp.concatenate([s_p, hp.scores[:1]])
+    c0 = jnp.concatenate([d0, hp.payload[:1, 0]])
+    c1 = jnp.concatenate([d1, hp.payload[:1, 1]])
+    cv = jnp.concatenate([multi, (hp.size > 0)[None]])
+    j = H.lex_argmax(cs, c0, c1, cv)
+    emit = single & (~jnp.any(cv)
+                     | H.lex_gt(s_p, d0, d1, cs[j], c0[j], c1[j]))
+    slot = n_out + jnp.cumsum(emit.astype(jnp.int32)) - 1
+    write = emit & (slot < k)
+    at = jnp.where(write, slot, k)
+    out_docs = out_docs.at[at].set(jnp.where(write, d0, out_docs[at]))
+    out_scores = out_scores.at[at].set(
+        jnp.where(write, s_p, out_scores[at]))
+    n_out = jnp.minimum(n_out + jnp.sum(emit.astype(jnp.int32)), k)
+
+    # split every popped multi at the doc boundary nearest its middle;
+    # all S×Q left-child tfs in ONE batched descent (degenerate math on
+    # masked lanes is discarded by the push enables)
+    mid = (d0 + d1) // 2
+    lo1, hi1 = wtbc.segment_extent(idx, d0, mid)
+    tf1 = wtbc.count_range_batch(
+        idx, jnp.tile(words, S), jnp.repeat(lo1, Q),
+        jnp.repeat(hi1, Q)).reshape(S, Q) * wmask
+    tf2 = tf - tf1
+    s1, s2 = seg_score(tf1), seg_score(tf2)
+    pay1 = jnp.concatenate([jnp.stack([d0, mid], axis=1), tf1], axis=1)
+    pay2 = jnp.concatenate([jnp.stack([mid, d1], axis=1), tf2], axis=1)
+    # bulk reinsert, parent-major (left, right, unemitted single): at
+    # S=1 this is push(left), push(right) — the one-pop order exactly.
+    # (At S=1 the popped item IS the heap max, so a popped singleton
+    # always clears the threshold and the re-push slot is statically
+    # dead — drop it to keep the one-pop bucket at the classical cost.)
+    slots = ([s1, s2], [pay1, pay2],
+             [multi & seg_valid(tf1, s1), multi & seg_valid(tf2, s2)])
+    if S > 1:
+        slots[0].append(s_p)
+        slots[1].append(pay)
+        slots[2].append(single & ~emit)
+    W = len(slots[0])
+    push_s = jnp.stack(slots[0], axis=1).reshape(W * S)
+    push_pay = jnp.stack(slots[1], axis=1).reshape(W * S, 2 + Q)
+    push_en = jnp.stack(slots[2], axis=1).reshape(W * S)
+    hp = H.push_many(hp, push_s, push_pay, push_en)
+    nv = jnp.sum(valid.astype(jnp.int32))
+    return (hp, out_docs, out_scores, n_out, it + 1, pops + nv,
+            padded + (S - nv))
+
+
+def _bucket_index(n_live, buckets):
+    """Scalar index of the smallest bucket >= n_live (n_live >= 1)."""
+    return sum((n_live > w).astype(jnp.int32) for w in buckets[:-1])
 
 
 @functools.partial(jax.jit,
@@ -95,119 +256,109 @@ def topk_dr(idx: WTBCIndex, words: jnp.ndarray, wmask: jnp.ndarray,
     ranked.  With ``beam_width`` = P > 1 the budget is enforced at iteration
     granularity (overshoot < P).
 
-    ``beam_width`` = P pops P segments per iteration and batches their rank
-    workload into one fused call; P=1 is the classical exact pop order.
+    ``beam_width`` = P pops *up to* P segments per iteration and batches
+    their rank workload into one fused call sized to the live frontier
+    (pow2 buckets — see the module docstring); P=1 is the classical exact
+    pop order.  Results are bitwise-identical across widths and buckets.
     """
-    Q = words.shape[0]
     P = int(beam_width)
     idf_w = jnp.where(wmask, idf[words], 0.0).astype(jnp.float32)
-
-    def seg_score(tf):
-        # (..., Q) int32 -> (...,) float32; matvec == the one-pop jnp.dot
-        return tf.astype(jnp.float32) @ idf_w
-
-    def seg_valid(tf, score):
-        if conjunctive:
-            return jnp.all((tf > 0) | ~wmask, axis=-1) & jnp.any(wmask)
-        return score > 0.0
-
-    n_docs = idx.n_docs
-    lo0, hi0 = wtbc.segment_extent(idx, jnp.int32(0), n_docs)
-    tf0 = count_words_range(idx, words, lo0, hi0) * wmask
-    score0 = seg_score(tf0)
-    pay0 = jnp.concatenate([jnp.stack([jnp.int32(0), n_docs]), tf0])
-    hp = H.make(heap_cap, 2 + Q)
-    hp = H.push(hp, score0, pay0, seg_valid(tf0, score0))
-
-    # emission order is already globally sorted; track an explicit write
-    # cursor.  Slot k is a trash slot for beam emissions past the k budget.
-    out_docs = jnp.full((k + 1,), -1, jnp.int32)
-    out_scores = jnp.full((k + 1,), -jnp.inf, jnp.float32)
+    st0 = _dr_row_init(idx, words, wmask, idf_w, k=k,
+                       conjunctive=conjunctive, heap_cap=heap_cap)
 
     def cond(st):
-        hp, _, _, n_out, it, pops = st
-        ok = (n_out < k) & (hp.size > 0)
-        if max_pops is not None:
-            ok = ok & (pops < max_pops)
-        return ok
+        return _dr_row_cond(st, k=k, max_pops=max_pops)
 
-    def body(st):
-        hp, out_docs, out_scores, n_out, it, pops = st
-        s_p, pay, valid, hp = H.pop_p(hp, P)          # scores descending
-        d0, d1, tf = pay[:, 0], pay[:, 1], pay[:, 2:]
-        single = valid & ((d1 - d0) == 1)
-        multi = valid & ~single
+    buckets = _frontier_buckets(P)
 
-        # exact-emission bound: everything still pending is lex-bounded by
-        # the heap top after the P pops and the popped multis' own keys — a
-        # segment's key (score desc, d0 asc, d1 desc) strictly bounds every
-        # descendant's (score is monotone over concatenation; on score ties
-        # a left child keeps d0 but shrinks d1, a right child grows d0).  A
-        # popped singleton that lex-beats the bound is the globally next
-        # answer *including tie order*, so the emission sequence is the same
-        # for every beam width; the rest go back into the heap.
-        cs = jnp.concatenate([s_p, hp.scores[:1]])
-        c0 = jnp.concatenate([d0, hp.payload[:1, 0]])
-        c1 = jnp.concatenate([d1, hp.payload[:1, 1]])
-        cv = jnp.concatenate([multi, (hp.size > 0)[None]])
-        j = H.lex_argmax(cs, c0, c1, cv)
-        emit = single & (~jnp.any(cv)
-                         | H.lex_gt(s_p, d0, d1, cs[j], c0[j], c1[j]))
-        slot = n_out + jnp.cumsum(emit.astype(jnp.int32)) - 1
-        write = emit & (slot < k)
-        at = jnp.where(write, slot, k)
-        out_docs = out_docs.at[at].set(jnp.where(write, d0, out_docs[at]))
-        out_scores = out_scores.at[at].set(
-            jnp.where(write, s_p, out_scores[at]))
-        n_out = jnp.minimum(n_out + jnp.sum(emit.astype(jnp.int32)), k)
+    def mk(S):
+        return lambda st: _dr_row_body(st, words, wmask, idf_w, idx=idx,
+                                       S=S, k=k, conjunctive=conjunctive)
 
-        # split every popped multi at the doc boundary nearest its middle;
-        # all P×Q left-child tfs in ONE batched descent (degenerate math on
-        # masked lanes is discarded by the push enables)
-        mid = (d0 + d1) // 2
-        lo1, hi1 = wtbc.segment_extent(idx, d0, mid)
-        tf1 = wtbc.count_range_batch(
-            idx, jnp.tile(words, P), jnp.repeat(lo1, Q),
-            jnp.repeat(hi1, Q)).reshape(P, Q) * wmask
-        tf2 = tf - tf1
-        s1, s2 = seg_score(tf1), seg_score(tf2)
-        pay1 = jnp.concatenate([jnp.stack([d0, mid], axis=1), tf1], axis=1)
-        pay2 = jnp.concatenate([jnp.stack([mid, d1], axis=1), tf2], axis=1)
-        # bulk reinsert, parent-major (left, right, unemitted single): at
-        # P=1 this is push(left), push(right) — the one-pop order exactly.
-        # (At P=1 the popped item IS the heap max, so a popped singleton
-        # always clears the threshold and the re-push slot is statically
-        # dead — drop it to keep the default path at the classical cost.)
-        slots = ([s1, s2], [pay1, pay2],
-                 [multi & seg_valid(tf1, s1), multi & seg_valid(tf2, s2)])
-        if P > 1:
-            slots[0].append(s_p)
-            slots[1].append(pay)
-            slots[2].append(single & ~emit)
-        W = len(slots[0])
-        push_s = jnp.stack(slots[0], axis=1).reshape(W * P)
-        push_pay = jnp.stack(slots[1], axis=1).reshape(W * P, 2 + Q)
-        push_en = jnp.stack(slots[2], axis=1).reshape(W * P)
-        hp = H.push_many(hp, push_s, push_pay, push_en)
-        return (hp, out_docs, out_scores, n_out, it + 1,
-                pops + jnp.sum(valid.astype(jnp.int32)))
+    bodies = [mk(S) for S in buckets]
+    if len(buckets) == 1:
+        body = bodies[0]
+    else:
+        def body(st):
+            # scalar bucket index: plain jit executes ONE branch per trip
+            n_live = jnp.minimum(st[0].size, P)
+            return jax.lax.switch(_bucket_index(n_live, buckets), bodies, st)
 
-    hp, out_docs, out_scores, n_out, iters, pops = jax.lax.while_loop(
-        cond, body, (hp, out_docs, out_scores, jnp.int32(0), jnp.int32(0),
-                     jnp.int32(0)))
+    hp, out_docs, out_scores, n_out, iters, pops, padded = \
+        jax.lax.while_loop(cond, body, st0)
     return DRResult(out_docs[:k], out_scores[:k], n_out, iters, pops,
-                    hp.overflowed)
+                    hp.overflowed, padded)
 
 
+@functools.partial(jax.jit,
+                   static_argnames=("k", "conjunctive", "heap_cap", "max_pops",
+                                    "beam_width"))
 def topk_dr_batch(idx: WTBCIndex, words: jnp.ndarray, wmask: jnp.ndarray,
                   idf: jnp.ndarray, *, k: int, conjunctive: bool,
                   heap_cap: int, max_pops: int | None = None,
                   beam_width: int = 1) -> DRResult:
-    """Batched queries: ``words``/``wmask`` are (B, Q)."""
-    fn = functools.partial(topk_dr, k=k, conjunctive=conjunctive,
-                           heap_cap=heap_cap, max_pops=max_pops,
-                           beam_width=beam_width)
-    return jax.vmap(lambda w, m: fn(idx, w, m, idf))(words, wmask)
+    """Batched queries: ``words``/``wmask`` are (B, Q).
+
+    One explicitly batched loop instead of ``vmap(topk_dr)``: the loop body
+    is the *vmapped* per-row trip (so row math — and therefore every result
+    leaf — is bitwise what the vmapped serial core produced), but the
+    frontier bucket is chosen by a **scalar** index, the max live width
+    across still-live rows.  Under ``vmap`` a per-row ``lax.switch`` index
+    is batched, which executes every branch and selects — paying for all
+    buckets at once; hoisting the dispatch above the vmapped body keeps the
+    one-branch-per-trip property the padding fix exists for.  Rows that
+    finish early are mask-frozen per trip, exactly the select that
+    ``vmap(while_loop)`` lowers to, so per-row ``iters``/``pops`` stay
+    row-exact.
+
+    ``padded`` is the one leaf that reflects the batched SCHEDULE rather
+    than the per-row computation: a row whose frontier is narrower than the
+    batch's max live width pops padded lanes the serial per-row bucket
+    would avoid, so batch ``padded`` >= serial ``padded`` row-wise (every
+    other leaf is bitwise equal).
+    """
+    B, Q = words.shape
+    P = int(beam_width)
+    idf_w = jnp.where(wmask, idf[words], 0.0).astype(jnp.float32)   # (B, Q)
+    st0 = jax.vmap(lambda w, m, iw: _dr_row_init(
+        idx, w, m, iw, k=k, conjunctive=conjunctive, heap_cap=heap_cap))(
+            words, wmask, idf_w)
+
+    def lives(st):
+        return jax.vmap(lambda s: _dr_row_cond(s, k=k, max_pops=max_pops))(st)
+
+    def cond(st):
+        return jnp.any(lives(st))
+
+    buckets = _frontier_buckets(P)
+
+    def mk(S):
+        row = lambda s, w, m, iw: _dr_row_body(s, w, m, iw, idx=idx, S=S,
+                                               k=k, conjunctive=conjunctive)
+
+        def body_S(st):
+            live = lives(st)
+            new = jax.vmap(row)(st, words, wmask, idf_w)
+            return _tree_select(live, new, st)
+        return body_S
+
+    bodies = [mk(S) for S in buckets]
+    if len(buckets) == 1:
+        body = bodies[0]
+    else:
+        def body(st):
+            # the bucket index is a SCALAR (max live width over the batch):
+            # every row pops its full min(size, P) this trip — identical
+            # pop set — while the descent batch shrinks to the widest live
+            # frontier instead of the configured P
+            live = lives(st)
+            n_live = jnp.max(jnp.where(live, jnp.minimum(st[0].size, P), 0))
+            return jax.lax.switch(_bucket_index(n_live, buckets), bodies, st)
+
+    hp, out_docs, out_scores, n_out, iters, pops, padded = \
+        jax.lax.while_loop(cond, body, st0)
+    return DRResult(out_docs[:, :k], out_scores[:, :k], n_out, iters, pops,
+                    hp.overflowed, padded)
 
 
 # ---------------------------------------------------------------------------

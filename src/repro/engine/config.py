@@ -40,6 +40,16 @@ class EngineConfig:
                equal to the serial core at the same Q bucket; ignored by
                the paths the mega core does not cover (DRB, positional,
                sharded).  Old snapshots restore with the default (False).
+    kernel_backend: lowering request for the Pallas descent kernels
+               (``kernels/backend.py``, DESIGN.md §9): "auto" picks the
+               host's accelerator (TPU DMA-gather kernel, Triton on GPU)
+               and the vectorized jnp reference elsewhere; explicit values
+               ("tpu", "gpu", "ref", "gpu:interpret", …) pin the lowering —
+               e.g. "gpu:interpret" drives the fused device-resident beam
+               step through the Pallas interpreter on any host (the CI
+               parity configuration).  Resolved once per search into the
+               executor key, so a changed force/env never serves a stale
+               compiled program.
     """
     block: int = bytemap.DEFAULT_BLOCK
     eps: float = 1e-6
@@ -48,10 +58,16 @@ class EngineConfig:
     default_window: int = 8
     default_beam_width: int = 1
     default_mega: bool = False
+    kernel_backend: str = "auto"
 
     def __post_init__(self):
         if self.block <= 0:
             raise ValueError(f"block must be positive, got {self.block}")
+        from repro.kernels import backend as _kb
+        if self.kernel_backend not in _kb.VALID_REQUESTS:
+            raise ValueError(f"kernel_backend must be one of "
+                             f"{_kb.VALID_REQUESTS}, got "
+                             f"{self.kernel_backend!r}")
         if self.default_k <= 0:
             raise ValueError(f"default_k must be positive, got {self.default_k}")
         if self.default_window <= 0:

@@ -42,6 +42,14 @@ class ExecutorKey(NamedTuple):
                           # the pool-frontier core (core/mega.py) instead of
                           # vmapping the serial heap core; normalized False
                           # everywhere else so keys never split spuriously
+    lowering: str = "ref" # resolved descent-kernel plan tag
+                          # (kernels/backend.py KernelPlan.tag — "tpu",
+                          # "gpu", "gpu:interpret", "ref", …): part of the
+                          # key so a changed force/env/config can never hit
+                          # an executor compiled under another lowering; on
+                          # the mega path a "gpu*" tag additionally routes
+                          # the loop body through the fused device-resident
+                          # beam step (kernels/beam_step.py)
 
 
 def make_single_dr(key: ExecutorKey, *, heap_cap: int, mega_cap: int, note):
@@ -49,11 +57,16 @@ def make_single_dr(key: ExecutorKey, *, heap_cap: int, mega_cap: int, note):
     conjunctive = key.mode == "and"
 
     if key.mega:
+        # a gpu-kind lowering replaces the whole loop trip with ONE fused
+        # beam-step launch; "tpu"/"ref" keep the jnp pool body (the descent
+        # inside it still dispatches through kernels/ops.py)
+        fused = key.lowering if key.lowering.startswith("gpu") else None
+
         def fn(idx, words, wmask, idf):
             note()
             return mega.topk_dr_mega(idx, words, wmask, idf, k=key.k,
                                      conjunctive=conjunctive, cap=mega_cap,
-                                     max_pops=key.budget)
+                                     max_pops=key.budget, fused=fused)
     else:
         def fn(idx, words, wmask, idf):
             note()

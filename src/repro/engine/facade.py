@@ -31,6 +31,7 @@ import numpy as np
 
 from repro.core import distributed, drb, positional, scoring, wtbc
 from repro.engine import executors
+from repro.kernels import backend as kernel_backend
 from repro.engine.config import EngineConfig
 from repro.engine.results import SearchResults
 
@@ -511,9 +512,16 @@ class SearchEngine:
         elif df_cap is not None:
             raise ValueError("df_cap applies to the DRB/OR gather path only "
                              f"(got strategy={strat!r}, mode={mode!r})")
+        # resolve the descent-kernel lowering OUTSIDE the trace: the tag is
+        # part of the executor key, so flipping a force/env (or an engine
+        # built with another config.kernel_backend) compiles its own program
+        # instead of replaying one lowered differently
+        lowering = kernel_backend.descent_plan(self.config.kernel_backend
+                                               if self.config.kernel_backend
+                                               != "auto" else None).tag
         key = executors.ExecutorKey(self.backend, strat, mode, m, k,
                                     tuple(ranks.shape), budget, df_cap,
-                                    beam_width, mega)
+                                    beam_width, mega, lowering)
         ex = self._executor(key)
         words, wmask = jnp.asarray(ranks), jnp.asarray(mask)
         match_pos = match_len = None
@@ -534,7 +542,8 @@ class SearchEngine:
                              match_pos=match_pos, match_len=match_len,
                              beam_width=beam_width,
                              pops=getattr(res, "pops", None),
-                             overflowed=getattr(res, "overflowed", None))
+                             overflowed=getattr(res, "overflowed", None),
+                             padded=getattr(res, "padded", None))
 
     # -- post-processing -----------------------------------------------------
 

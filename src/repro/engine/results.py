@@ -39,6 +39,10 @@ class SearchResults:
     overflowed: (B,) bool — a search heap dropped a push at capacity; the
              affected query's ranking may be incomplete and should not be
              trusted silently.  See :meth:`diagnostics`.
+    padded:  (B,) int32 — dead beam lanes processed (pad-waste): pops +
+             padded = lanes the loop actually paid for.  The active-frontier
+             buckets (core/ranked.py) keep this near zero; None on paths
+             without beam padding.
     """
     docs: jnp.ndarray
     scores: jnp.ndarray
@@ -53,6 +57,7 @@ class SearchResults:
     beam_width: int = 1
     pops: jnp.ndarray | None = None
     overflowed: jnp.ndarray | None = None
+    padded: jnp.ndarray | None = None
 
     def __post_init__(self):
         if self.docs.ndim != 2 or self.scores.shape != self.docs.shape:
@@ -95,13 +100,17 @@ class SearchResults:
         """Per-query health/work counters as host arrays.
 
         Keys: ``work`` (loop trips), ``beam_width``, and — when the backend
-        reports them — ``pops`` (segments/candidates examined) and
+        reports them — ``pops`` (segments/candidates examined),
         ``overflowed`` (heap-capacity drops; a True entry means that query's
         ranking may be incomplete and the engine should be rebuilt with a
-        larger ``heap_cap`` or queried with a smaller k)."""
+        larger ``heap_cap`` or queried with a smaller k) and ``padded``
+        (dead beam lanes paid for — the pad-waste metric of the
+        active-frontier buckets)."""
         out = {"work": np.asarray(self.work), "beam_width": self.beam_width}
         if self.pops is not None:
             out["pops"] = np.asarray(self.pops)
         if self.overflowed is not None:
             out["overflowed"] = np.asarray(self.overflowed)
+        if self.padded is not None:
+            out["padded"] = np.asarray(self.padded)
         return out

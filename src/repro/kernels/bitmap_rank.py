@@ -18,6 +18,9 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.bitvec import WORDS_PER_BLOCK
+from repro.kernels import backend
+
+_SUPPORTED = ("tpu",)
 
 
 def _kernel(blk_ref, pos_ref, words_ref, counts_ref, out_ref):
@@ -34,14 +37,24 @@ def _kernel(blk_ref, pos_ref, words_ref, counts_ref, out_ref):
     out_ref[0] = counts_ref[0] + jnp.sum(pc)
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
 def bitmap_rank1(words: jnp.ndarray, counts: jnp.ndarray, n_bits: jnp.ndarray,
-                 pos_q: jnp.ndarray, *, interpret: bool = True) -> jnp.ndarray:
+                 pos_q: jnp.ndarray, *,
+                 interpret: bool | None = None) -> jnp.ndarray:
     """Batched rank1: set bits among the first ``pos_q[i]`` bits.
 
     words: (n_words,) uint32 (padded to WORDS_PER_BLOCK multiple);
     counts: (n_blocks+1,) int32 cumulative ones;  pos_q: (B,).
+
+    ``interpret`` defaults to compiled on TPU, interpret elsewhere.
     """
+    return _bitmap_rank1(words, counts, n_bits, pos_q,
+                         interpret=backend.resolve_interpret(interpret,
+                                                             _SUPPORTED))
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def _bitmap_rank1(words, counts, n_bits, pos_q, *,
+                  interpret: bool) -> jnp.ndarray:
     n_blocks = counts.shape[0] - 1
     tiles = words.reshape(n_blocks, WORDS_PER_BLOCK)
     pos_q = jnp.clip(pos_q.astype(jnp.int32), 0, n_bits)

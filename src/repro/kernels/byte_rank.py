@@ -26,6 +26,10 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import backend
+
+_SUPPORTED = ("tpu",)
+
 
 def _kernel(blk_ref, pos_ref, byte_ref, data_ref, counts_ref, out_ref, *, block: int):
     i = pl.program_id(0)
@@ -38,15 +42,24 @@ def _kernel(blk_ref, pos_ref, byte_ref, data_ref, counts_ref, out_ref, *, block:
     out_ref[0] = base + jnp.sum(hits.astype(jnp.int32))
 
 
-@functools.partial(jax.jit, static_argnames=("block", "interpret"))
 def byte_rank(data_padded: jnp.ndarray, counts: jnp.ndarray, length: jnp.ndarray,
               bytes_q: jnp.ndarray, pos_q: jnp.ndarray, *, block: int,
-              interpret: bool = True) -> jnp.ndarray:
+              interpret: bool | None = None) -> jnp.ndarray:
     """Batched rank: occurrences of ``bytes_q[i]`` in ``data[: pos_q[i]]``.
 
     data_padded: (n_blocks*block,) uint8;  counts: (n_blocks+1, 256) int32
     cumulative;  bytes_q/pos_q: (B,).  Returns (B,) int32.
+
+    ``interpret`` defaults to compiled on TPU, interpret elsewhere (this is a
+    TPU-only lowering — resolved outside the jit trace).
     """
+    return _byte_rank(data_padded, counts, length, bytes_q, pos_q, block=block,
+                      interpret=backend.resolve_interpret(interpret, _SUPPORTED))
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def _byte_rank(data_padded, counts, length, bytes_q, pos_q, *, block: int,
+               interpret: bool) -> jnp.ndarray:
     n_blocks = counts.shape[0] - 1
     tiles = data_padded.reshape(n_blocks, block)
     pos_q = jnp.clip(pos_q.astype(jnp.int32), 0, length)

@@ -23,6 +23,10 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import backend
+
+_SUPPORTED = ("tpu",)
+
 
 def _kernel(blk_ref, pos_ref, byte_ref, data_ref, counts_ref, out_ref, *,
             block: int, max_per_block: int):
@@ -41,11 +45,10 @@ def _kernel(blk_ref, pos_ref, byte_ref, data_ref, counts_ref, out_ref, *,
     out_ref[0] = base + jnp.sum(hits.astype(jnp.int32))
 
 
-@functools.partial(jax.jit, static_argnames=("block", "interpret"))
 def segment_tf(data_padded: jnp.ndarray, counts: jnp.ndarray,
                length: jnp.ndarray, byte: jnp.ndarray,
                bounds: jnp.ndarray, *, block: int,
-               interpret: bool = True) -> jnp.ndarray:
+               interpret: bool | None = None) -> jnp.ndarray:
     """tf of ``byte`` within each [bounds[d], bounds[d+1]) segment.
 
     data_padded (n_blocks*block,) uint8; counts (n_blocks+1, 256) int32;
@@ -54,7 +57,17 @@ def segment_tf(data_padded: jnp.ndarray, counts: jnp.ndarray,
     Sorted boundaries mean consecutive grid steps index the same or adjacent
     counter blocks, so the Pallas pipeline re-uses the resident VMEM tile
     (same-index elision) — the streaming behaviour described above.
+
+    ``interpret`` defaults to compiled on TPU, interpret elsewhere.
     """
+    return _segment_tf(data_padded, counts, length, byte, bounds, block=block,
+                       interpret=backend.resolve_interpret(interpret,
+                                                           _SUPPORTED))
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def _segment_tf(data_padded, counts, length, byte, bounds, *, block: int,
+                interpret: bool) -> jnp.ndarray:
     n_blocks = counts.shape[0] - 1
     tiles = data_padded.reshape(n_blocks, block)
     bounds = jnp.clip(bounds.astype(jnp.int32), 0, length)

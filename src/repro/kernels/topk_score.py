@@ -26,6 +26,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels import backend
+
 NEG = -3.0e38  # python float: jnp scalars may not be captured by kernel bodies
 
 
@@ -43,16 +45,25 @@ def _kernel(cands_ref, query_ref, out_s_ref, out_i_ref, *, k: int, tile: int):
                            NEG, scores)
 
 
-@functools.partial(jax.jit, static_argnames=("k", "tile", "interpret"))
 def scored_topk(cands: jnp.ndarray, query: jnp.ndarray, *, k: int,
-                tile: int = 1024, interpret: bool = True
+                tile: int = 1024, interpret: bool | None = None
                 ) -> tuple[jnp.ndarray, jnp.ndarray]:
     """Top-k of ``cands @ query``: returns (scores (k,), indices (k,)).
 
     cands (C, d) float32/bf16 (C padded to a tile multiple by the caller or
     here), query (d,).  MXU-aligned choices: d multiple of 128, tile multiple
     of 8 (fp32) — asserted here to keep the claimed VMEM layout honest.
+
+    ``interpret`` defaults to compiled on any real accelerator (the body is
+    plain blocked Pallas — no TPU-specific primitives), interpret on CPU.
     """
+    return _scored_topk(cands, query, k=k, tile=tile,
+                        interpret=backend.resolve_interpret(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("k", "tile", "interpret"))
+def _scored_topk(cands, query, *, k: int, tile: int,
+                 interpret: bool) -> tuple[jnp.ndarray, jnp.ndarray]:
     C, d = cands.shape
     assert tile % 8 == 0, "sublane alignment"
     n_tiles = -(-C // tile)

@@ -1,26 +1,37 @@
-"""Pallas TPU kernel: fused 3-level WTBC count descent (DESIGN.md §6).
+"""Pallas kernel family: fused 3-level WTBC count descent (DESIGN.md §6, §9).
 
 ``count_range(w, lo, hi)`` — the inner operation of Algorithm 1 — performs two
 ``rank_b`` per wavelet-tree level.  Launched through ``byte_rank`` that is six
 kernel launches per (word, range) triple, and the level-L positions depend on
-the level-(L-1) rank results, so the launches cannot even overlap.  This
-kernel fuses the whole root-to-leaf descent for a *batch* of M triples into a
-single launch: one grid step per triple, and inside each step the three levels
-run back-to-back out of VMEM.
+the level-(L-1) rank results, so the launches cannot even overlap.  The
+kernels here fuse the whole root-to-leaf descent for a *batch* of M triples
+into a single launch: one grid step per triple, and inside each step the three
+levels run back-to-back.
 
 Because the level-1/2 tile indices are data-dependent (they come from the
 level-0/1 ranks computed *inside* the kernel), the usual scalar-prefetch
-BlockSpec gather cannot feed them.  Instead the level byte arrays and counter
-matrices stay in ``ANY`` memory space (HBM on TPU) and each rank issues a
-manual ``pltpu.make_async_copy`` of exactly one (block,) byte tile and one
-(256,) counter row into VMEM scratch — the same minimal traffic the BlockSpec
-pipeline would DMA, just with in-kernel indices.  The two endpoint DMAs of a
-level are started together and overlap.
+BlockSpec gather cannot feed them.  The two lowerings differ only in how the
+in-kernel gather is expressed; the descent itself — range mapping, clipping,
+leaf selection — is ONE shared definition (``_descent_levels``), so the TPU,
+GPU and interpret paths cannot drift apart:
 
-Per grid step: 3 levels × 2 endpoints × (tile DMA + counter-row DMA + masked
-compare-reduce).  The per-word node offsets / base ranks (scalar-prefetched)
-keep it at 2 ranks per level exactly like the scalar path in
-``wtbc.count_range``.
+* **TPU** (``_kernel_tpu``): level byte arrays and counter matrices stay in
+  ``ANY`` memory space (HBM) and each rank issues a manual
+  ``pltpu.make_async_copy`` of exactly one (block,) byte tile and one (256,)
+  counter row into VMEM scratch.  The two endpoint DMAs of a level start
+  together and overlap.
+* **GPU / Triton** (``_kernel_gpu``): the same gathers are in-kernel
+  ``pl.load`` calls — a (2, block) integer-indexed gather of the endpoint
+  tiles and two scalar counter loads — which Pallas lowers to Triton masked
+  gather loads from global memory.  This is also the body the interpreter
+  runs, so CPU-only CI exercises the Triton code path bit-for-bit.
+
+Per grid step: 3 levels x 2 endpoints x (tile gather + counter gather +
+masked compare-reduce).  The per-word node offsets / base ranks keep it at 2
+ranks per level exactly like the scalar path in ``wtbc.count_range``.
+
+Lowering selection (``kernels/backend.py``): compiled on real backends,
+interpret only when explicitly requested or when no accelerator exists.
 """
 from __future__ import annotations
 
@@ -30,33 +41,65 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+from jax.experimental.pallas import triton as plgpu
 
 from repro.core.bytemap import ByteMap
+from repro.kernels import backend
 
 MAX_LEVELS = 3
+COUNTER_ROW = 256
 
 
-def _kernel(cwb_ref, off_ref, base_ref, cwlen_ref, lo_ref, hi_ref, len_ref,
-            d0, c0, d1, c1, d2, c2,
-            out_ref, tile, row, tsem, rsem, *, block: int,
-            n_blocks: tuple[int, ...]):
+def _tile_rank(tile, byte, pos, blk, *, block: int):
+    """In-tile rank contribution: occurrences of ``byte`` in the ``blk``-th
+    (block,) tile strictly before position ``pos``.  ``tile`` is (R, block)
+    uint8; ``byte`` / ``pos`` / ``blk`` are (R,) int32.  Shared by every
+    lowering — the single definition of the masked compare-reduce."""
+    lane = jax.lax.broadcasted_iota(jnp.int32, tile.shape, 1)
+    hit = (tile == byte[:, None].astype(jnp.uint8)) \
+        & (lane < (pos - blk * block)[:, None])
+    return jnp.sum(hit.astype(jnp.int32), axis=1)
+
+
+def _descent_levels(level_rank, cwb, off, base, cwl, a0, b0, lens):
+    """The shared root-to-leaf descent: map the endpoint pair through the
+    three levels, subtract the per-word base ranks, select the leaf's rank
+    difference.  ``level_rank(L, byte, pa, pb) -> (ra, rb)`` supplies the
+    lowering-specific gathered ranks (un-based); everything else — clipping,
+    node offsets, leaf selection — is defined once here for TPU, GPU and
+    interpret alike."""
+    a, b = a0, b0
+    res = jnp.int32(0)
+    for L in range(MAX_LEVELS):
+        byte = cwb[L]
+        length = lens[L]
+        pa = jnp.clip(off[L] + a, 0, length)
+        pb = jnp.clip(off[L] + b, 0, length)
+        # clamping the tile index into range makes the residual cutoff span
+        # the whole final tile, which is exactly rank(length) (counter row
+        # blk + one full-tile count) — no special casing for pos == length
+        ra, rb = level_rank(L, byte, pa, pb)
+        ra = ra - base[L]
+        rb = rb - base[L]
+        is_leaf = cwl == (L + 1)
+        res = jnp.where(is_leaf, rb - ra, res)
+        a, b = ra, rb
+    return res
+
+
+# ---------------------------------------------------------------------------
+# TPU lowering: manual DMA tile gathers (ANY -> VMEM scratch)
+# ---------------------------------------------------------------------------
+
+def _kernel_tpu(cwb_ref, off_ref, base_ref, cwlen_ref, lo_ref, hi_ref, len_ref,
+                d0, c0, d1, c1, d2, c2,
+                out_ref, tile, row, tsem, rsem, *, block: int,
+                n_blocks: tuple[int, ...]):
     i = pl.program_id(0)
     data_refs = (d0, d1, d2)
     count_refs = (c0, c1, c2)
 
-    a = lo_ref[i]
-    b = hi_ref[i]
-    res = jnp.int32(0)
-    for L in range(MAX_LEVELS):
-        byte = cwb_ref[i, L]
-        off = off_ref[i, L]
-        base = base_ref[i, L]
-        length = len_ref[L]
-        pa = jnp.clip(off + a, 0, length)
-        pb = jnp.clip(off + b, 0, length)
-        # clamp the tile index into range; the residual cutoff then spans the
-        # whole final tile, which is exactly rank(length) (counter row blk +
-        # one full-tile count) — no special casing for pos == length
+    def level_rank(L, byte, pa, pb):
         blk_a = jnp.minimum(pa // block, n_blocks[L] - 1)
         blk_b = jnp.minimum(pb // block, n_blocks[L] - 1)
         copies = (
@@ -69,29 +112,72 @@ def _kernel(cwb_ref, off_ref, base_ref, cwlen_ref, lo_ref, hi_ref, len_ref,
             cp.start()
         for cp in copies:
             cp.wait()
-        lane = jax.lax.broadcasted_iota(jnp.int32, (1, block), 1)
-        hit_a = (tile[0:1, :] == byte.astype(jnp.uint8)) & (lane < pa - blk_a * block)
-        hit_b = (tile[1:2, :] == byte.astype(jnp.uint8)) & (lane < pb - blk_b * block)
-        ra = row[0, byte] + jnp.sum(hit_a.astype(jnp.int32)) - base
-        rb = row[1, byte] + jnp.sum(hit_b.astype(jnp.int32)) - base
-        is_leaf = cwlen_ref[i] == (L + 1)
-        res = jnp.where(is_leaf, rb - ra, res)
-        a, b = ra, rb
-    out_ref[0] = res
+        intile = _tile_rank(tile[...], jnp.stack([byte, byte]),
+                            jnp.stack([pa, pb]), jnp.stack([blk_a, blk_b]),
+                            block=block)
+        return row[0, byte] + intile[0], row[1, byte] + intile[1]
+
+    out_ref[0] = _descent_levels(
+        level_rank, cwb_ref[i], off_ref[i], base_ref[i], cwlen_ref[i],
+        lo_ref[i], hi_ref[i], len_ref)
 
 
-@functools.partial(jax.jit, static_argnames=("block", "interpret"))
-def wavelet_descent(levels: tuple[ByteMap, ...], cw: jnp.ndarray,
-                    cw_len: jnp.ndarray, node_off: jnp.ndarray,
-                    base_rank: jnp.ndarray, words: jnp.ndarray,
-                    los: jnp.ndarray, his: jnp.ndarray, *, block: int,
-                    interpret: bool = True) -> jnp.ndarray:
-    """Batched fused count: occurrences of word-rank ``words[i]`` in the root
-    range ``[los[i], his[i])``.  Returns (M,) int32.
+# ---------------------------------------------------------------------------
+# GPU (Triton) lowering: in-kernel pl.load gathers from global memory
+# ---------------------------------------------------------------------------
 
-    ``levels`` are the WTBC's per-level ByteMaps (uniform ``block``); ``cw`` /
-    ``cw_len`` / ``node_off`` / ``base_rank`` the index's per-word tables.
-    """
+def _kernel_gpu(cwb_ref, off_ref, base_ref, cwlen_ref, lo_ref, hi_ref, len_ref,
+                d0, c0, d1, c1, d2, c2,
+                out_ref, *, block: int, n_blocks: tuple[int, ...]):
+    i = pl.program_id(0)
+    data_refs = (d0, d1, d2)
+    count_refs = (c0, c1, c2)
+    lane = jax.lax.broadcasted_iota(jnp.int32, (2, block), 1)
+
+    def level_rank(L, byte, pa, pb):
+        blk = jnp.stack([jnp.minimum(pa // block, n_blocks[L] - 1),
+                         jnp.minimum(pb // block, n_blocks[L] - 1)])
+        # endpoint tiles: one (2, block) integer-indexed gather — Triton
+        # lowers this to masked gather loads from the flat byte stream
+        tile = pl.load(data_refs[L], (blk[:, None] * block + lane,))
+        # counter entries: the (blk, byte) cells of the flattened (blocks+1,
+        # 256) counter matrix — two scalar loads, not a 256-wide row DMA
+        cnt = pl.load(count_refs[L], (blk * COUNTER_ROW + byte,))
+        intile = _tile_rank(tile, jnp.stack([byte, byte]),
+                            jnp.stack([pa, pb]), blk, block=block)
+        return cnt[0] + intile[0], cnt[1] + intile[1]
+
+    out_ref[0] = _descent_levels(
+        level_rank, cwb_ref[i], off_ref[i], base_ref[i], cwlen_ref[i],
+        lo_ref[i], hi_ref[i], len_ref)
+
+
+# ---------------------------------------------------------------------------
+# entry point
+# ---------------------------------------------------------------------------
+
+def _level_arrays(levels: tuple[ByteMap, ...], block: int):
+    """Per-level (tiles, counters, n_blocks) with empty levels padded to one
+    zero tile so in-kernel gathers stay in bounds on every lowering (an empty
+    level is never the selected leaf of a real word; its clipped positions
+    are 0, so the padded reads contribute base-cancelled zeros)."""
+    tiles, counters, n_blocks = [], [], []
+    for lv in levels:
+        nb = lv.counts.shape[0] - 1
+        if nb <= 0:
+            tiles.append(jnp.zeros((1, block), jnp.uint8))
+            counters.append(jnp.zeros((2, COUNTER_ROW), jnp.int32))
+            n_blocks.append(1)
+        else:
+            tiles.append(lv.data.reshape(nb, block))
+            counters.append(lv.counts)
+            n_blocks.append(nb)
+    return tiles, counters, tuple(n_blocks)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "kind", "interpret"))
+def _descend(levels, cw, cw_len, node_off, base_rank, words, los, his, *,
+             block: int, kind: str, interpret: bool) -> jnp.ndarray:
     M = words.shape[0]
     words = words.astype(jnp.int32)
     cwb = cw[words].astype(jnp.int32)                  # (M, 3) codeword bytes
@@ -99,30 +185,68 @@ def wavelet_descent(levels: tuple[ByteMap, ...], cw: jnp.ndarray,
     bases = base_rank[words]                           # (M, 3)
     cwl = cw_len[words]                                # (M,)
     lens = jnp.stack([lv.length for lv in levels])     # (3,)
-    n_blocks = tuple(lv.counts.shape[0] - 1 for lv in levels)
-    tiles = tuple(lv.data.reshape(n_blocks[L], block)
-                  for L, lv in enumerate(levels))
+    tiles, counters, n_blocks = _level_arrays(levels, block)
 
-    grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=7,     # cwb, offs, bases, cwl, lo, hi, lens
-        grid=(M,),
-        in_specs=[pl.BlockSpec(memory_space=pltpu.ANY)] * 6,
-        out_specs=pl.BlockSpec((1,), lambda i, *_: (i,)),
-        scratch_shapes=[
-            pltpu.VMEM((2, block), jnp.uint8),    # endpoint byte tiles
-            pltpu.VMEM((2, 256), jnp.int32),      # endpoint counter rows
-            pltpu.SemaphoreType.DMA((2,)),
-            pltpu.SemaphoreType.DMA((2,)),
-        ],
-    )
+    if kind == "tpu":
+        grid_spec = pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=7,     # cwb, offs, bases, cwl, lo, hi, lens
+            grid=(M,),
+            in_specs=[pl.BlockSpec(memory_space=pltpu.ANY)] * 6,
+            out_specs=pl.BlockSpec((1,), lambda i, *_: (i,)),
+            scratch_shapes=[
+                pltpu.VMEM((2, block), jnp.uint8),    # endpoint byte tiles
+                pltpu.VMEM((2, COUNTER_ROW), jnp.int32),
+                pltpu.SemaphoreType.DMA((2,)),
+                pltpu.SemaphoreType.DMA((2,)),
+            ],
+        )
+        fn = pl.pallas_call(
+            functools.partial(_kernel_tpu, block=block, n_blocks=n_blocks),
+            grid_spec=grid_spec,
+            out_shape=jax.ShapeDtypeStruct((M,), jnp.int32),
+            interpret=interpret,
+        )
+        return fn(cwb, offs, bases, cwl,
+                  los.astype(jnp.int32), his.astype(jnp.int32), lens,
+                  tiles[0], counters[0], tiles[1], counters[1],
+                  tiles[2], counters[2])
+
+    # gpu / Triton: flat streams, everything gathered in-kernel
+    flat = [t.reshape(-1) for t in tiles]
+    cflat = [c.reshape(-1) for c in counters]
+    params = {} if interpret else {
+        "compiler_params": plgpu.TritonCompilerParams(num_warps=4)}
     fn = pl.pallas_call(
-        functools.partial(_kernel, block=block, n_blocks=n_blocks),
-        grid_spec=grid_spec,
+        functools.partial(_kernel_gpu, block=block, n_blocks=n_blocks),
+        grid=(M,),
+        in_specs=[pl.BlockSpec(memory_space=pl.ANY)] * 13,
+        out_specs=pl.BlockSpec((1,), lambda i: (i,)),
         out_shape=jax.ShapeDtypeStruct((M,), jnp.int32),
         interpret=interpret,
+        **params,
     )
     return fn(cwb, offs, bases, cwl,
               los.astype(jnp.int32), his.astype(jnp.int32), lens,
-              tiles[0], levels[0].counts,
-              tiles[1], levels[1].counts,
-              tiles[2], levels[2].counts)
+              flat[0], cflat[0], flat[1], cflat[1], flat[2], cflat[2])
+
+
+def wavelet_descent(levels: tuple[ByteMap, ...], cw: jnp.ndarray,
+                    cw_len: jnp.ndarray, node_off: jnp.ndarray,
+                    base_rank: jnp.ndarray, words: jnp.ndarray,
+                    los: jnp.ndarray, his: jnp.ndarray, *, block: int,
+                    lowering: str | None = None,
+                    interpret: bool | None = None) -> jnp.ndarray:
+    """Batched fused count: occurrences of word-rank ``words[i]`` in the root
+    range ``[los[i], his[i])``.  Returns (M,) int32.
+
+    ``levels`` are the WTBC's per-level ByteMaps (uniform ``block``); ``cw`` /
+    ``cw_len`` / ``node_off`` / ``base_rank`` the index's per-word tables.
+
+    ``lowering`` / ``interpret`` default to :func:`backend.kernel_plan` —
+    compiled TPU or Triton kernel on a real accelerator, the portable Triton
+    body under the interpreter otherwise.  Resolution happens here, outside
+    the jit trace, so forced plans never leak into cached executables.
+    """
+    plan = backend.kernel_plan(lowering, interpret)
+    return _descend(levels, cw, cw_len, node_off, base_rank, words, los, his,
+                    block=block, kind=plan.kind, interpret=plan.interpret)

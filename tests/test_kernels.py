@@ -171,11 +171,13 @@ def test_ab_parity_wavelet_descent(small_index, seed):
     np.testing.assert_array_equal(kern, scalar)
 
 
-def test_wavelet_dispatch_wiring(small_index, monkeypatch):
-    """The TPU branch of ops.wavelet_count_batch passes the index tables in
-    the kernel's argument order (on CPU that branch otherwise never runs)."""
+@pytest.mark.parametrize("plan", ["tpu:interpret", "gpu:interpret"])
+def test_wavelet_dispatch_wiring(small_index, plan):
+    """Each accelerator branch of ops.wavelet_count_batch passes the index
+    tables in the kernel's argument order (on CPU neither branch runs by
+    default; ``force_plan`` pins the lowering and interpret executes it)."""
     from repro.core import wtbc
-    from repro.kernels import wavelet_descent as wd
+    from repro.kernels import backend
 
     idx, _ = small_index
     rng = np.random.default_rng(7)
@@ -186,12 +188,8 @@ def test_wavelet_dispatch_wiring(small_index, monkeypatch):
         idx.levels, idx.cw, idx.cw_len, idx.node_off, idx.base_rank,
         words, lo, hi))
 
-    real = wd.wavelet_descent
-    monkeypatch.setattr(ops, "_on_tpu", lambda: True)
-    monkeypatch.setattr(
-        ops._wavelet_descent_k, "wavelet_descent",
-        lambda *a, **kw: real(*a, **{**kw, "interpret": True}))
-    got = np.asarray(wtbc.count_range_batch(idx, words, lo, hi))
+    with backend.force_plan(plan):
+        got = np.asarray(wtbc.count_range_batch(idx, words, lo, hi))
     np.testing.assert_array_equal(got, want)
 
 
