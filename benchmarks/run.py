@@ -6,13 +6,16 @@
 Prints ``name,us_per_call,derived`` CSV rows (the harness contract).
 ``--json PATH`` additionally writes the rows as a machine-readable artifact
 (``{"bench": {name: us_per_call}, "beam_sweep": {...}, "serving": {...},
-"megabatch": {...}}`` — the BENCH_PR8.json artifact that carries the perf
+"megabatch": {...}}`` — the BENCH_PR9.json artifact that carries the perf
 trajectory; beam-sweep entries hold iters/pops ratios vs P=1, serving
-entries the table 6 throughput/percentile/cache metrics, megabatch entries
-the table 7 skew/heavy-band tail latencies for mega vs lockstep vs
-unbatched serving).  The artifact is also mirrored into
-``artifacts/`` so the committed trajectory and the CI upload stay in one
-place.
+entries the table 6 throughput/percentile/cache metrics — every serving
+entry now also carries the queue-wait/service percentile split, and the
+``open_obs`` entry the registry-derived per-stage latency attribution
+(queue_wait/device/slice/total) plus the live WTBC roofline gauges
+(bytes/query, achieved fraction per kernel backend) — megabatch entries the
+table 7 skew/heavy-band tail latencies for mega vs lockstep vs unbatched
+serving).  The artifact is also mirrored into ``artifacts/`` so the
+committed trajectory and the CI upload stay in one place.
 """
 from __future__ import annotations
 

@@ -11,16 +11,23 @@ passes over the shared benchmark engine:
      the batcher must beat at equal client concurrency
   3. open loop at a fixed offered QPS (no cache) — latency under load
   4. closed loop over a Zipf-repeated workload with the cache ON
+  5. open loop with the obs registry ENABLED on a DR profile (pops exist):
+     per-stage latency attribution (queue_wait/device/slice/total) and the
+     live WTBC roofline gauges, straight from the registry (DESIGN.md §10)
 
 The workload is drawn from the selective band (low df, 2 words): the
 interactive regime where per-call host overhead dominates and coalescing
 pays.  Every pass runs after ``server.warmup`` and asserts the executor
 trace counter stayed flat — serving must never compile on the query path.
+Every report also carries the queue-wait/service percentile split, so a
+regression in admission (queue grows) reads differently from one in the
+engine (service grows).
 """
 from __future__ import annotations
 
 import numpy as np
 
+import repro.obs as obs
 from benchmarks import common
 from repro.serve import QueryProfile, SearchServer, loadgen
 
@@ -57,9 +64,15 @@ def run(bench: common.Bench | None = None, *, n_requests: int = 768,
         results[tag] = {"qps": rep.qps, "p50_ms": rep.p50_ms,
                         "p95_ms": rep.p95_ms, "p99_ms": rep.p99_ms,
                         "mean_ms": rep.mean_ms, "shed": rep.n_shed,
+                        "queue_p50_ms": rep.queue_p50_ms,
+                        "queue_p99_ms": rep.queue_p99_ms,
+                        "service_p50_ms": rep.service_p50_ms,
+                        "service_p99_ms": rep.service_p99_ms,
                         "mean_batch": st["mean_batch"],
                         "batch_hist": st["batch_hist"],
                         "cache_hit_rate": st["cache"]["hit_rate"]}
+        if rep.stages:
+            results[tag]["stages"] = rep.stages
 
     # -- 1. micro-batched closed loop ---------------------------------------
     srv = SearchServer(engine, max_batch=MAX_BATCH, max_wait_ms=2.0,
@@ -110,6 +123,41 @@ def run(bench: common.Bench | None = None, *, n_requests: int = 768,
                                         profile=profile)
     emit("closed_cached", rep_cache,
          f"hit_rate={rep_cache.server_stats['cache']['hit_rate']:.2f}")
+
+    # -- 5. observability pass: registry stages + live roofline gauges ------
+    # DR profile — the path that reports pops/padded, which is what feeds
+    # the WTBC query-roofline attachment; tfidf keeps 'dr' legal.
+    reg = obs.Registry(enabled=True)
+    profile_dr = QueryProfile(mode="or", strategy="dr", measure="tfidf",
+                              k=10)
+    srv_m = SearchServer(engine, max_batch=MAX_BATCH, max_wait_ms=2.0,
+                         cache_size=0, queue_depth=4 * WORKERS, registry=reg)
+    srv_m.warmup(queries, profile_dr)
+    try:
+        with srv_m:
+            rep_obs = loadgen.open_loop(
+                srv_m, workload, target_qps=open_qps, profile=profile_dr,
+                seed=7)
+    finally:
+        engine.obs_registry = None      # don't tax later benchmark passes
+    emit("open_obs", rep_obs)
+    assert rep_obs.stages and "device" in rep_obs.stages \
+        and "queue_wait" in rep_obs.stages, \
+        "obs-enabled pass produced no per-stage attribution"
+
+    def _gauges(name: str) -> dict:
+        return {dict(g.labels).get("backend", "?"): g.value
+                for g in reg.find(name)}
+
+    roofline = {"bytes_per_query": _gauges("repro_roofline_bytes_per_query"),
+                "model_us_per_query":
+                    _gauges("repro_roofline_model_us_per_query"),
+                "achieved_frac": _gauges("repro_roofline_achieved_frac")}
+    assert roofline["achieved_frac"], "no live roofline gauge was exported"
+    results["open_obs"]["roofline"] = roofline
+    frac = next(iter(roofline["achieved_frac"].values()))
+    print_rows(common.csv_row("table6/open_obs_roofline", 0.0,
+                              f"achieved_frac={frac:.2e}"))
     return results
 
 

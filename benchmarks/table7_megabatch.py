@@ -20,8 +20,10 @@ Three servers per band, identical client concurrency:
 
 Every pass runs post-warmup and asserts zero retraces (a compile on the
 query path would drown the signal).  The JSON carries p50/p99 per
-(server, band) plus the skew-band p99 ratio ``lockstep / mega`` — the
-number BENCH_PR7.json tracks (> 1 means mega wins the tail).
+(server, band) — total plus the queue-wait/service decomposition, since
+work skew shows up as queue growth long before it moves service time —
+plus the skew-band p99 ratio ``lockstep / mega`` — the number
+BENCH_PR7.json tracks (> 1 means mega wins the tail).
 """
 from __future__ import annotations
 
@@ -106,6 +108,10 @@ def run(bench: common.Bench | None = None, *, n_requests: int = 512,
             results[tag] = {"qps": rep.qps, "p50_ms": rep.p50_ms,
                             "p95_ms": rep.p95_ms, "p99_ms": rep.p99_ms,
                             "mean_ms": rep.mean_ms, "shed": rep.n_shed,
+                            "queue_p50_ms": rep.queue_p50_ms,
+                            "queue_p99_ms": rep.queue_p99_ms,
+                            "service_p50_ms": rep.service_p50_ms,
+                            "service_p99_ms": rep.service_p99_ms,
                             "mean_batch": st["mean_batch"],
                             "batch_hist": st["batch_hist"]}
 

@@ -236,7 +236,11 @@ def distributed_topk(sharded: ShardedWTBC, words: jnp.ndarray, wmask: jnp.ndarra
         global_avg_dl=P(),
         n_shards=sharded.n_shards)
     in_specs = (sharded_specs, P(), P(), P())
-    out_specs = (P(), P(), P(), P(), P(), P())
+    # drb-or is the one loop-free method whose core reports no pad-waste
+    # lane count; every other method threads `padded` through the merge so
+    # the serving/obs layer sees the same diagnostics sharded as single-host
+    has_pad = method != "drb-or"
+    out_specs = (P(),) * (7 if has_pad else 6)
 
     def local(sh: ShardedWTBC, words, wmask, idf_tab):
         batched = words.ndim == 2                      # (B, Q) query batches
@@ -289,13 +293,19 @@ def distributed_topk(sharded: ShardedWTBC, words: jnp.ndarray, wmask: jnp.ndarra
         n_found = jnp.sum(top_s > -jnp.inf, axis=-1).astype(jnp.int32)
         # work metrics sum over shards; overflow is any-shard
         iters, pops, over = res.iters, res.pops, res.overflowed.astype(jnp.int32)
+        padded = res.padded
         for ax in axes:
             iters = jax.lax.psum(iters, ax)
             pops = jax.lax.psum(pops, ax)
             over = jax.lax.psum(over, ax)
-        return (jnp.where(top_s > -jnp.inf, top_d, -1), top_s, n_found, iters,
-                pops, over > 0)
+            if has_pad:
+                padded = jax.lax.psum(padded, ax)
+        out = (jnp.where(top_s > -jnp.inf, top_d, -1), top_s, n_found, iters,
+               pops, over > 0)
+        return out + (padded,) if has_pad else out
 
     fn = _shard_map(local, mesh=mesh, in_specs=in_specs, out_specs=out_specs)
-    docs, scores, n_found, iters, pops, over = fn(sharded, words, wmask, idf)
-    return ranked.DRResult(docs, scores, n_found, iters, pops, over)
+    res = fn(sharded, words, wmask, idf)
+    docs, scores, n_found, iters, pops, over = res[:6]
+    return ranked.DRResult(docs, scores, n_found, iters, pops, over,
+                           padded=res[6] if has_pad else None)

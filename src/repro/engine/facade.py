@@ -21,6 +21,8 @@ executors.py), so steady-state traffic never retraces.
 from __future__ import annotations
 
 import dataclasses
+import threading
+import time
 import types
 import zlib
 from typing import Any
@@ -29,6 +31,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+import repro.obs as obs
 from repro.core import distributed, drb, positional, scoring, wtbc
 from repro.engine import executors
 from repro.kernels import backend as kernel_backend
@@ -105,6 +108,10 @@ class SearchEngine:
         self._avg_dl = None
         self._executors: dict[executors.ExecutorKey, Any] = {}
         self._trace_counts: dict[executors.ExecutorKey, int] = {}
+        self._stats_lock = threading.Lock()     # _executors/_trace_counts
+        # None -> record into the live process default (obs.enable()/use());
+        # the serving frontend pins its own registry here on adoption
+        self.obs_registry: "obs.Registry | None" = None
         self._shard_slices: dict[int, wtbc.WTBCIndex] = {}
         if backend == "single":
             self._heap_cap = 2 * int(idx.n_docs) + 4
@@ -336,11 +343,29 @@ class SearchEngine:
         cap = 1 << int(m + 2 - 1).bit_length()
         return min(cap, self._max_df_cap)
 
+    @property
+    def _obs(self) -> "obs.Registry":
+        """The registry this engine records into: an explicitly adopted one
+        (``obs_registry``, set by the serving frontend), else the *live*
+        process default — looked up per call so ``obs.enable()``/``obs.use``
+        after engine construction still take effect."""
+        return self.obs_registry if self.obs_registry is not None \
+            else obs.default_registry()
+
     def _executor(self, key: executors.ExecutorKey):
-        ex = self._executors.get(key)
+        with self._stats_lock:
+            ex = self._executors.get(key)
         if ex is None:
             def note():
-                self._trace_counts[key] = self._trace_counts.get(key, 0) + 1
+                with self._stats_lock:
+                    self._trace_counts[key] = \
+                        self._trace_counts.get(key, 0) + 1
+                self._obs.counter(
+                    "repro_engine_traces_total",
+                    {"backend": key.backend, "strategy": key.strategy,
+                     "mode": key.mode},
+                    "executor jit traces (growth after warmup = key churn)",
+                ).inc()
             if key.backend == "sharded":
                 ex = executors.make_sharded(
                     key, mesh=self._mesh, shard_axes=self._shard_axes,
@@ -353,7 +378,8 @@ class SearchEngine:
                                               note=note)
             else:
                 ex = executors.make_single_drb(key, note=note)
-            self._executors[key] = ex
+            with self._stats_lock:
+                ex = self._executors.setdefault(key, ex)
         return ex
 
     def suggested_df_cap(self, queries) -> int:
@@ -524,6 +550,8 @@ class SearchEngine:
                                     beam_width, mega, lowering)
         ex = self._executor(key)
         words, wmask = jnp.asarray(ranks), jnp.asarray(mask)
+        reg = self._obs
+        t0 = time.perf_counter() if reg.enabled else 0.0
         match_pos = match_len = None
         if mode in POSITIONAL_MODES:
             res = ex(self.idx, words, wmask, self._idf_table(m),
@@ -536,6 +564,8 @@ class SearchEngine:
         else:
             res = ex(self.idx, self.aux, words, wmask, self._idf_table(m),
                      self._avg_doc_len())
+        if reg.enabled:
+            self._record_search(reg, key, res, ranks.shape, t0)
         return SearchResults(docs=res.docs, scores=res.scores,
                              n_found=res.n_found, work=res.iters, k=k,
                              mode=mode, strategy=strat, measure=m.name,
@@ -544,6 +574,52 @@ class SearchEngine:
                              pops=getattr(res, "pops", None),
                              overflowed=getattr(res, "overflowed", None),
                              padded=getattr(res, "padded", None))
+
+    def _record_search(self, reg: "obs.Registry", key, res, shape, t0):
+        """Registry side of one observed search (enabled registries only):
+        per-(backend, strategy, mode) dispatch counters, per-row work
+        histograms (trips/pops/pad-waste), and the live WTBC query-roofline
+        gauges.  Forces device completion first — the wall time must cover
+        the compute, not just its dispatch — which is why the disabled path
+        skips this method entirely (DESIGN.md §10 overhead budget)."""
+        jax.block_until_ready(res.docs)
+        dt = time.perf_counter() - t0
+        B, Q = int(shape[0]), int(shape[1])
+        labels = {"backend": key.backend, "strategy": key.strategy,
+                  "mode": key.mode}
+        reg.counter("repro_engine_searches_total", labels,
+                    "search batches dispatched").inc()
+        reg.counter("repro_engine_rows_total", labels,
+                    "query rows searched").inc(B)
+        reg.histogram("repro_engine_dispatch_seconds", labels,
+                      "blocking wall time per search batch").observe(dt)
+        reg.gauge("repro_engine_executors", None,
+                  "compiled executors cached").set(len(self._executors))
+        work = np.asarray(res.iters).ravel()
+        reg.histogram("repro_engine_trips", labels,
+                      "search-loop trips per query row"
+                      ).observe_many(work.tolist())
+        pops = getattr(res, "pops", None)
+        padded = getattr(res, "padded", None)
+        if pops is not None:
+            pops = np.asarray(pops).ravel()
+            reg.histogram("repro_engine_pops", labels,
+                          "candidate pops per query row"
+                          ).observe_many(pops.tolist())
+        if padded is not None:
+            padded = np.asarray(padded).ravel()
+            reg.histogram("repro_engine_pad_lanes", labels,
+                          "dead beam lanes per query row (pad waste)"
+                          ).observe_many(padded.tolist())
+        if pops is not None and len(pops):
+            from repro.analysis import roofline
+            rl = roofline.wtbc_query_roofline(
+                backend=kernel_backend.canonical_backend(),
+                measured_us_per_query=dt * 1e6 / max(B, 1),
+                pops=float(pops.mean()),
+                padded=float(padded.mean()) if padded is not None else 0.0,
+                q=Q, block=int(self.config.block))
+            roofline.live_wtbc_gauges(rl, reg)
 
     # -- post-processing -----------------------------------------------------
 
@@ -609,9 +685,12 @@ class SearchEngine:
 
     @property
     def stats(self) -> dict:
-        """Executor-cache occupancy and per-key jit trace counts."""
-        return {"executors": len(self._executors),
-                "traces": dict(self._trace_counts)}
+        """Executor-cache occupancy and per-key jit trace counts (snapshotted
+        under the same lock ``note()`` mutates under, so a reader never sees
+        a dict mid-resize)."""
+        with self._stats_lock:
+            return {"executors": len(self._executors),
+                    "traces": dict(self._trace_counts)}
 
     def space_report(self) -> dict[str, int]:
         """Index (and built-DRB) space, bytes per component."""

@@ -100,13 +100,29 @@ def descent_plan(request: str | None = None) -> KernelPlan:
     req = _requested(request)
     if req == "auto":
         acc = accelerator()
-        return KernelPlan(acc, False) if acc else KernelPlan("ref", False)
-    if req == "ref":
-        return KernelPlan("ref", False)
-    if req == "interpret":
-        return KernelPlan("gpu", True)      # portable body under interpret
-    kind, _, mode = req.partition(":")
-    return KernelPlan(kind, mode == "interpret" or accelerator() != kind)
+        plan = KernelPlan(acc, False) if acc else KernelPlan("ref", False)
+    elif req == "ref":
+        plan = KernelPlan("ref", False)
+    elif req == "interpret":
+        plan = KernelPlan("gpu", True)      # portable body under interpret
+    else:
+        kind, _, mode = req.partition(":")
+        plan = KernelPlan(kind, mode == "interpret" or accelerator() != kind)
+    _record_plan(plan)
+    return plan
+
+
+def _record_plan(plan: KernelPlan) -> None:
+    """Count lowering resolutions per tag in the live obs registry — a
+    production sanity gauge: a tag you didn't deploy showing up here means a
+    stray force/env leaked into serving.  Free while the registry is
+    disabled (the counter's write is one checked no-op)."""
+    import repro.obs as obs
+    reg = obs.default_registry()
+    if not reg.enabled:              # skip even the get-or-create lookup
+        return
+    reg.counter("repro_kernel_plan_total", {"tag": plan.tag},
+                "descent-kernel lowering resolutions by plan tag").inc()
 
 
 def kernel_plan(lowering: str | None = None,

@@ -18,14 +18,24 @@ executor bucket, then drives load and reports latency percentiles:
 back-to-back clients); a positive value runs the open-loop Poisson shape.
 ``--smoke`` exits non-zero unless the run was healthy (finite p99, zero
 shed) — the CI serving smoke job drives exactly this.
+
+Observability (DESIGN.md §10): ``--metrics`` enables the process
+:mod:`repro.obs` registry (span timelines, per-stage histograms, live
+roofline gauges); ``--metrics-port N`` additionally serves Prometheus text
+at ``http://127.0.0.1:N/metrics`` (0 = ephemeral, the chosen port is
+printed) plus a JSON snapshot at ``/metrics.json``; ``--stats-every S``
+appends one JSONL registry snapshot every S seconds to ``--stats-jsonl``
+(or stdout).  Any of the three implies ``--metrics``.
 """
 from __future__ import annotations
 
 import argparse
 import sys
+import threading
 
 import numpy as np
 
+import repro.obs as obs
 from repro.engine import SearchEngine
 from repro.engine.facade import MEASURES
 from repro.serve import QueryProfile, SearchServer, loadgen, snapshot
@@ -114,7 +124,44 @@ def main():
                     help="closed-loop client concurrency")
     ap.add_argument("--smoke", action="store_true",
                     help="exit 1 unless p99 is finite and nothing was shed")
+    # observability
+    ap.add_argument("--metrics", action="store_true",
+                    help="enable the repro.obs registry (span timelines, "
+                         "stage histograms, roofline gauges)")
+    ap.add_argument("--metrics-port", type=int, default=None,
+                    help="serve Prometheus text at /metrics on this port "
+                         "(0 = ephemeral; implies --metrics)")
+    ap.add_argument("--stats-every", type=float, default=0.0,
+                    help="append a JSONL registry snapshot every S seconds "
+                         "(implies --metrics)")
+    ap.add_argument("--stats-jsonl", default=None,
+                    help="path the periodic/final JSONL snapshots append to "
+                         "(default: print to stdout)")
     args = ap.parse_args()
+
+    metrics_on = (args.metrics or args.metrics_port is not None
+                  or args.stats_every > 0)
+    reg = obs.enable() if metrics_on else None
+    metrics_http = None
+    if args.metrics_port is not None:
+        metrics_http = obs.MetricsServer(reg, port=args.metrics_port)
+        print(f"metrics: http://127.0.0.1:{metrics_http.port}/metrics",
+              flush=True)
+
+    def emit_snapshot():
+        if args.stats_jsonl:
+            obs.write_jsonl(args.stats_jsonl, reg)
+        else:
+            print(obs.snapshot_line(reg), flush=True)
+
+    stats_stop = threading.Event()
+    stats_thread = None
+    if args.stats_every > 0:
+        def _stats_loop():
+            while not stats_stop.wait(args.stats_every):
+                emit_snapshot()
+        stats_thread = threading.Thread(target=_stats_loop, daemon=True,
+                                        name="obs-stats-jsonl")
 
     engine = build_or_load(args)
     print_space_report(engine)
@@ -151,7 +198,8 @@ def main():
                           cache_size=args.cache_size,
                           work_buckets=args.work_buckets,
                           heavy_df=args.heavy_df,
-                          adaptive_wait=args.adaptive_wait)
+                          adaptive_wait=args.adaptive_wait,
+                          registry=reg)
     print("warming up (compiling executor buckets) ...", flush=True)
     try:
         n = server.warmup(queries, profile)
@@ -161,6 +209,8 @@ def main():
     print(f"compiled {n} executors; admitting traffic", flush=True)
 
     workload = loadgen.zipf_workload(queries, args.requests, seed=args.seed)
+    if stats_thread is not None:
+        stats_thread.start()
     with server:
         if args.target_qps > 0:
             rep = loadgen.open_loop(server, workload,
@@ -169,6 +219,7 @@ def main():
         else:
             rep = loadgen.closed_loop(server, workload,
                                       n_workers=args.workers, profile=profile)
+    stats_stop.set()
 
     retraces = sum(engine.stats["traces"].values()) - traces0
     st = rep.server_stats
@@ -176,6 +227,20 @@ def main():
     print(f"batch sizes: {st['batch_hist']} (mean {st['mean_batch']:.2f}) | "
           f"cache hit rate {st['cache']['hit_rate']:.1%} | "
           f"retraces after warmup: {retraces}")
+    if metrics_on:
+        if rep.stages:
+            print("stage latency attribution (registry-derived):")
+            for stage, d in sorted(rep.stages.items()):
+                print(f"  {stage:10s} p50 {d['p50_ms']:.2f}ms  "
+                      f"p95 {d['p95_ms']:.2f}ms  p99 {d['p99_ms']:.2f}ms  "
+                      f"(n={d['count']})")
+        for g in reg.find("repro_roofline_achieved_frac"):
+            be = dict(g.labels).get("backend", "?")
+            print(f"roofline[{be}]: achieved fraction {g.value:.2e} of the "
+                  "memory-bandwidth floor")
+        emit_snapshot()
+        if metrics_http is not None:
+            metrics_http.close()
     if st["overflowed"]:
         print(f"WARNING: {st['overflowed']} responses hit heap overflow — "
               "their rankings may be incomplete (rebuild with a larger "

@@ -43,6 +43,7 @@ import time
 from collections import deque
 from typing import Callable
 
+import repro.obs as obs
 from repro.engine.facade import pow2_bucket
 
 EWMA_ALPHA = 0.3        # inter-arrival smoothing (recent gaps dominate)
@@ -143,7 +144,8 @@ class MicroBatcher:
 
     def __init__(self, source: Callable, *, max_batch: int = 16,
                  max_wait_ms: float = 2.0, pending_cap: int | None = None,
-                 adaptive_wait: bool = False, clock=time.monotonic):
+                 adaptive_wait: bool = False, clock=time.monotonic,
+                 registry: "obs.Registry | None" = None):
         if max_batch < 1:
             raise ValueError(f"max_batch must be >= 1, got {max_batch}")
         if max_wait_ms < 0:
@@ -158,6 +160,10 @@ class MicroBatcher:
         # deque and the shed policy would never engage
         self.pending_cap = max(max_batch, pending_cap or 4 * max_batch)
         self._clock = clock
+        self._obs = obs.resolve(registry)
+        self._m_wait = self._obs.histogram(
+            "repro_batch_coalesce_wait_seconds", None,
+            "head-request age when its batch formed")
         self._ewma_gap: float | None = None     # smoothed inter-arrival gap
         self._last_arrival: float | None = None
         self._pending: deque = deque()  # (words, profile, item, t_admit, lane)
@@ -171,6 +177,10 @@ class MicroBatcher:
         if len(r) == 4:                     # lane-less producers still work
             r = (*r, DEFAULT_LANE)
         self._pending.append(r)
+        if self._obs.enabled:
+            tl = getattr(r[2], "timeline", None)
+            if tl is not None:
+                tl.mark("lane_enqueue")
         now = self._clock()
         if self._last_arrival is not None:
             gap = now - self._last_arrival
@@ -234,6 +244,18 @@ class MicroBatcher:
             else:
                 rest.append(r)
         self._pending = rest
+        if self._obs.enabled:
+            lane = group[1]
+            self._obs.histogram(
+                "repro_batch_size",
+                {"lane": f"{lane.bucket}/{lane.cap or 'max'}"},
+                "real rows per coalesced batch, by admission lane",
+            ).observe(len(taken))
+            self._m_wait.observe(self._clock() - taken[0][3])
+            for _, _, item, _, _ in taken:
+                tl = getattr(item, "timeline", None)
+                if tl is not None:
+                    tl.mark("batch_form")
         rows = [list(words) for words, _, _, _, _ in taken]
         return Batch(profile=group[0],
                      items=[item for _, _, item, _, _ in taken],

@@ -9,8 +9,14 @@ clears the cache after the drain, so a hit can never cross engine versions
 even mid-swap (DESIGN.md §8).
 
 Thread-safe: ``get``/``put`` take a lock (submit threads race the dispatch
-thread).  ``capacity=0`` disables caching (every ``get`` is a miss, ``put``
-drops), so callers don't need a second code path.
+thread) and ``stats`` snapshots under the same lock — a reader can never
+observe a half-updated hit/miss pair.  ``capacity=0`` disables caching
+(every ``get`` is a miss, ``put`` drops), so callers don't need a second
+code path.
+
+Metrics: hits/misses/evictions mirror into a :mod:`repro.obs` registry
+(labeled by ``name`` so several caches can share one registry); recording is
+free while the registry is disabled (DESIGN.md §10).
 """
 from __future__ import annotations
 
@@ -18,11 +24,14 @@ import threading
 from collections import OrderedDict
 from typing import Any, Hashable
 
+import repro.obs as obs
+
 
 class LRUCache:
     """Bounded least-recently-used map with hit/miss counters."""
 
-    def __init__(self, capacity: int):
+    def __init__(self, capacity: int, *, registry: "obs.Registry | None" = None,
+                 name: str = "result_cache"):
         if capacity < 0:
             raise ValueError(f"capacity must be >= 0, got {capacity}")
         self.capacity = capacity
@@ -30,6 +39,14 @@ class LRUCache:
         self._lock = threading.Lock()
         self.hits = 0
         self.misses = 0
+        reg = obs.resolve(registry)
+        labels = {"cache": name}
+        self._m_hits = reg.counter("repro_cache_hits_total", labels,
+                                   "result-cache hits")
+        self._m_misses = reg.counter("repro_cache_misses_total", labels,
+                                     "result-cache misses")
+        self._m_evictions = reg.counter("repro_cache_evictions_total", labels,
+                                        "LRU entries evicted at capacity")
 
     def __len__(self) -> int:
         return len(self._data)
@@ -40,9 +57,11 @@ class LRUCache:
             val = self._data.get(key)
             if val is None:
                 self.misses += 1
+                self._m_misses.inc()
                 return None
             self._data.move_to_end(key)
             self.hits += 1
+            self._m_hits.inc()
             return val
 
     def put(self, key: Hashable, value: Any) -> None:
@@ -53,6 +72,7 @@ class LRUCache:
             self._data.move_to_end(key)
             while len(self._data) > self.capacity:
                 self._data.popitem(last=False)          # evict the LRU entry
+                self._m_evictions.inc()
 
     def clear(self) -> None:
         with self._lock:
@@ -60,7 +80,9 @@ class LRUCache:
 
     @property
     def stats(self) -> dict:
-        n = self.hits + self.misses
-        return {"hits": self.hits, "misses": self.misses,
-                "hit_rate": self.hits / n if n else 0.0,
-                "size": len(self._data), "capacity": self.capacity}
+        with self._lock:                  # consistent (hits, misses, size)
+            hits, misses, size = self.hits, self.misses, len(self._data)
+        n = hits + misses
+        return {"hits": hits, "misses": misses,
+                "hit_rate": hits / n if n else 0.0,
+                "size": size, "capacity": self.capacity}

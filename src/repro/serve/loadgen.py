@@ -87,11 +87,49 @@ def zipf_workload(queries: list, n_requests: int, *, alpha: float = 1.1,
     return [queries[i] for i in rng.choice(len(queries), n_requests, p=probs)]
 
 
+def _pcts(ms: np.ndarray) -> tuple[float, float, float]:
+    if len(ms):
+        return (float(np.percentile(ms, 50)), float(np.percentile(ms, 95)),
+                float(np.percentile(ms, 99)))
+    nan = float("nan")
+    return nan, nan, nan
+
+
+def stage_breakdown(server: SearchServer) -> dict | None:
+    """Registry-derived per-stage latency attribution (milliseconds): the
+    ``repro_request_stage_seconds`` histograms the server recorded, one entry
+    per stage (queue_wait / device / slice / total), each with reconstructed
+    p50/p95/p99, mean, and count.  None when the server's registry is
+    disabled or no stage was recorded — callers (table6/table7, BENCH)
+    emit the field only when observability was on."""
+    reg = getattr(server, "obs", None)
+    if reg is None or not reg.enabled:
+        return None
+    out = {}
+    for h in reg.find("repro_request_stage_seconds"):
+        stage = dict(h.labels).get("stage", "?")
+        if h.n == 0:
+            continue
+        p = h.percentiles((50, 95, 99))
+        out[stage] = {"p50_ms": p["p50"] * 1e3, "p95_ms": p["p95"] * 1e3,
+                      "p99_ms": p["p99"] * 1e3, "mean_ms": h.mean * 1e3,
+                      "count": h.n}
+    return out or None
+
+
 @dataclasses.dataclass
 class LoadReport:
     """What one load-generation run measured (latencies in milliseconds).
     ``n_err`` counts requests the server answered with an error — they are
-    excluded from the latency/throughput numbers, never silently blended."""
+    excluded from the latency/throughput numbers, never silently blended.
+
+    Total latency decomposes exactly per request into **queue wait**
+    (submit -> dispatch: admission backlog + coalescing) and **service**
+    (dispatch -> complete: engine + host slice); both percentile sets are
+    reported so capacity problems (queue grows) read differently from
+    kernel regressions (service grows).  ``stages`` is the finer
+    registry-derived breakdown (:func:`stage_breakdown`) when the server
+    ran with observability enabled, else None."""
     n_ok: int
     n_shed: int
     n_err: int
@@ -104,26 +142,65 @@ class LoadReport:
     mean_ms: float
     latencies_ms: np.ndarray
     server_stats: dict
+    queue_p50_ms: float = float("nan")
+    queue_p95_ms: float = float("nan")
+    queue_p99_ms: float = float("nan")
+    service_p50_ms: float = float("nan")
+    service_p95_ms: float = float("nan")
+    service_p99_ms: float = float("nan")
+    queue_ms: np.ndarray = dataclasses.field(
+        default_factory=lambda: np.empty(0))
+    service_ms: np.ndarray = dataclasses.field(
+        default_factory=lambda: np.empty(0))
+    stages: dict | None = None
 
     @classmethod
     def from_latencies(cls, lats_s: list[float], n_shed: int, n_err: int,
                        duration_s: float, server: SearchServer,
-                       n_timeout: int = 0) -> "LoadReport":
+                       n_timeout: int = 0, queue_s: list[float] | None = None,
+                       service_s: list[float] | None = None) -> "LoadReport":
         ms = np.asarray(sorted(lats_s)) * 1e3
-        pct = (lambda q: float(np.percentile(ms, q))) if len(ms) else \
-              (lambda q: float("nan"))
+        p50, p95, p99 = _pcts(ms)
+        q_ms = np.asarray(sorted(queue_s or [])) * 1e3
+        s_ms = np.asarray(sorted(service_s or [])) * 1e3
+        qp = _pcts(q_ms)
+        sp = _pcts(s_ms)
         return cls(n_ok=len(ms), n_shed=n_shed, n_err=n_err,
                    n_timeout=n_timeout, duration_s=duration_s,
                    qps=len(ms) / duration_s if duration_s > 0 else 0.0,
-                   p50_ms=pct(50), p95_ms=pct(95), p99_ms=pct(99),
+                   p50_ms=p50, p95_ms=p95, p99_ms=p99,
                    mean_ms=float(ms.mean()) if len(ms) else float("nan"),
-                   latencies_ms=ms, server_stats=server.stats)
+                   latencies_ms=ms, server_stats=server.stats,
+                   queue_p50_ms=qp[0], queue_p95_ms=qp[1], queue_p99_ms=qp[2],
+                   service_p50_ms=sp[0], service_p95_ms=sp[1],
+                   service_p99_ms=sp[2], queue_ms=q_ms, service_ms=s_ms,
+                   stages=stage_breakdown(server))
+
+    @classmethod
+    def from_tickets(cls, tickets: list, n_shed: int, duration_s: float,
+                     server: SearchServer) -> "LoadReport":
+        """Build a report from completed/abandoned tickets: total latency
+        plus the queue-wait/service decomposition each ticket carries."""
+        ok = [t for t in tickets
+              if t.done() and t.error is None and t.latency_s is not None]
+        errs = sum(1 for t in tickets if t.done() and t.error is not None)
+        timeouts = sum(1 for t in tickets if not t.done())
+        return cls.from_latencies(
+            [t.latency_s for t in ok], n_shed, errs, duration_s, server,
+            n_timeout=timeouts,
+            queue_s=[t.queue_wait_s for t in ok],
+            service_s=[t.service_s for t in ok])
 
     def summary(self) -> str:
         out = (f"{self.n_ok} ok / {self.n_shed} shed / {self.n_err} err in "
                f"{self.duration_s:.2f}s"
                f" | {self.qps:.0f} q/s | p50 {self.p50_ms:.1f}ms"
                f" | p95 {self.p95_ms:.1f}ms | p99 {self.p99_ms:.1f}ms")
+        if len(self.queue_ms):
+            out += (f" | queue p50/p95/p99 {self.queue_p50_ms:.1f}/"
+                    f"{self.queue_p95_ms:.1f}/{self.queue_p99_ms:.1f}ms"
+                    f" | service p50/p95/p99 {self.service_p50_ms:.1f}/"
+                    f"{self.service_p95_ms:.1f}/{self.service_p99_ms:.1f}ms")
         if self.n_timeout:
             out += f" | {self.n_timeout} STILL IN FLIGHT at deadline"
         return out
@@ -136,8 +213,8 @@ def closed_loop(server: SearchServer, workload: list, *,
     request per client — arrival rate adapts to service rate)."""
     it = iter(range(len(workload)))
     it_lock = threading.Lock()
-    lats: list[float] = []
-    shed, errs = [0], [0]
+    done_tickets: list = []          # retained for the queue/service split
+    shed = [0]
 
     def client():
         while True:
@@ -145,19 +222,18 @@ def closed_loop(server: SearchServer, workload: list, *,
                 i = next(it, None)
             if i is None:
                 return
-            t0 = time.monotonic()
             try:
-                server.search(workload[i], profile, timeout=timeout_s)
+                tk = server.submit(workload[i], profile)
             except ShedError:       # closed loop + bounded queue: count & move on
                 with it_lock:
                     shed[0] += 1
                 continue
-            except Exception:       # dispatch error: count it, keep the
-                with it_lock:       # worker alive for the rest of the load
-                    errs[0] += 1
-                continue
+            try:
+                tk.result(timeout_s)
+            except Exception:       # dispatch error/timeout: the ticket
+                pass                # carries it; keep the worker alive
             with it_lock:
-                lats.append(time.monotonic() - t0)
+                done_tickets.append(tk)
 
     threads = [threading.Thread(target=client) for _ in range(n_workers)]
     t0 = time.monotonic()
@@ -165,8 +241,8 @@ def closed_loop(server: SearchServer, workload: list, *,
         t.start()
     for t in threads:
         t.join()
-    return LoadReport.from_latencies(lats, shed[0], errs[0],
-                                     time.monotonic() - t0, server)
+    return LoadReport.from_tickets(done_tickets, shed[0],
+                                   time.monotonic() - t0, server)
 
 
 def open_loop(server: SearchServer, workload: list, *, target_qps: float,
@@ -194,9 +270,4 @@ def open_loop(server: SearchServer, workload: list, *, target_qps: float,
     for t in tickets:
         t._event.wait(max(0.0, deadline - time.monotonic()))
     duration = time.monotonic() - t0
-    lats = [t.latency_s for t in tickets
-            if t.done() and t.error is None and t.latency_s is not None]
-    errs = sum(1 for t in tickets if t.done() and t.error is not None)
-    timeouts = sum(1 for t in tickets if not t.done())
-    return LoadReport.from_latencies(lats, shed, errs, duration, server,
-                                     n_timeout=timeouts)
+    return LoadReport.from_tickets(tickets, shed, duration, server)

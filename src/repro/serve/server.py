@@ -26,6 +26,16 @@ cross an :meth:`SearchServer.swap_engine` (drain -> swap -> clear).
 Tail isolation (``work_buckets=True``): admission predicts per-query work
 from summed word document frequencies and batches only within factor-8 work
 lanes; predicted-heavy queries run alone (DESIGN.md §8).
+
+Observability (DESIGN.md §10): every request carries a span
+:class:`repro.obs.Timeline` (submit -> admit -> lane_enqueue -> batch_form
+-> dispatch -> device -> slice -> complete) when the server's registry is
+enabled, and the server mirrors its counters plus per-stage latency
+histograms (queue-wait / device / slice / total) into that registry —
+``stats`` remains the dict-shaped compatibility view, now built from
+defensive snapshots so no reader can observe a mid-mutation engine or cache
+dict.  With the registry disabled (the default) no timeline is allocated
+and every recording call is a single checked no-op.
 """
 from __future__ import annotations
 
@@ -36,6 +46,8 @@ import time
 
 import numpy as np
 
+import repro.obs as obs
+from repro.obs.tracing import Timeline, stage_durations
 from repro.serve.batcher import (DEFAULT_LANE, Batch, Lane, MicroBatcher,
                                  QueryProfile, work_bucket)
 from repro.serve.cache import LRUCache
@@ -64,6 +76,7 @@ class RowResult:
     measure: str
     pops: int | None = None
     overflowed: bool | None = None
+    padded: int | None = None
     match_pos: np.ndarray | None = None
     match_len: np.ndarray | None = None
 
@@ -76,10 +89,14 @@ class RowResult:
 class Ticket:
     """Handle for one in-flight request: wait on :meth:`result`; timings are
     recorded by the server (``latency_s`` spans submit -> completion,
-    queue wait included — the number a client actually experiences)."""
+    queue wait included — the number a client actually experiences; it
+    decomposes exactly into :attr:`queue_wait_s` + :attr:`service_s`).
+    ``timeline`` is the span trace (None unless the server's obs registry
+    is enabled)."""
 
     __slots__ = ("words", "profile", "t_submit", "t_dispatch", "t_done",
-                 "cache_hit", "batch_size", "_event", "_result", "_error")
+                 "cache_hit", "batch_size", "timeline",
+                 "_event", "_result", "_error")
 
     def __init__(self, words, profile):
         self.words = words
@@ -89,6 +106,7 @@ class Ticket:
         self.t_done = None
         self.cache_hit = False
         self.batch_size = 0
+        self.timeline: Timeline | None = None
         self._event = threading.Event()
         self._result = None
         self._error = None
@@ -113,9 +131,36 @@ class Ticket:
     def latency_s(self) -> float | None:
         return None if self.t_done is None else self.t_done - self.t_submit
 
+    @property
+    def t_complete(self) -> float | None:
+        """Completion time (alias of ``t_done`` — the span taxonomy's name
+        for the terminal mark)."""
+        return self.t_done
+
+    @property
+    def queue_wait_s(self) -> float | None:
+        """Submit -> dispatch: admission backlog + coalescing wait.  0 for a
+        cache hit (it never queues); None while in flight."""
+        if self.t_done is None:
+            return None
+        if self.t_dispatch is None:
+            return 0.0
+        return self.t_dispatch - self.t_submit
+
+    @property
+    def service_s(self) -> float | None:
+        """Dispatch -> complete: engine + host-slice time (for a cache hit,
+        the full — microseconds-scale — completion time); None in flight."""
+        if self.t_done is None:
+            return None
+        t0 = self.t_submit if self.t_dispatch is None else self.t_dispatch
+        return self.t_done - t0
+
     def _complete(self, result=None, error=None):
         self._result, self._error = result, error
         self.t_done = time.monotonic()
+        if self.timeline is not None:
+            self.timeline.mark("complete", self.t_done)
         self._event.set()
 
 
@@ -126,17 +171,26 @@ class SearchServer:
     def __init__(self, engine, *, max_batch: int = 16, max_wait_ms: float = 2.0,
                  queue_depth: int = 256, cache_size: int = 1024,
                  work_buckets: bool = False, heavy_df: int | None = None,
-                 adaptive_wait: bool = False):
+                 adaptive_wait: bool = False,
+                 registry: "obs.Registry | None" = None):
         """``work_buckets`` turns on df-predicted admission lanes: queries
         coalesce only within a factor-8 bucket of their summed word document
         frequency, and queries at or past ``heavy_df`` (default: twice the
         engine's document count) run at batch size 1 so they never tax
         lighter batch-mates (DESIGN.md §8).  ``adaptive_wait`` collapses the
-        coalescing wait to 0 while the arrival stream is idle."""
+        coalescing wait to 0 while the arrival stream is idle.  ``registry``
+        is the :mod:`repro.obs` registry counters/histograms/span timelines
+        record into (default: the process registry, disabled unless
+        ``obs.enable()``/the CLI metrics flags turned it on); the engine is
+        pinned to the same registry (``engine.obs_registry``) so engine-side
+        counters land next to the serving ones."""
         if queue_depth < 1:
             raise ValueError(f"queue_depth must be >= 1, got {queue_depth}")
         self.engine = engine
-        self.cache = LRUCache(cache_size)
+        self.obs = obs.resolve(registry)
+        if hasattr(engine, "obs_registry"):
+            engine.obs_registry = self.obs       # engine records where we do
+        self.cache = LRUCache(cache_size, registry=self.obs)
         self.work_buckets = work_buckets
         self._heavy_df_explicit = heavy_df is not None
         self.heavy_df = heavy_df if heavy_df is not None else \
@@ -150,7 +204,8 @@ class SearchServer:
         self._batcher = MicroBatcher(self._queue.get, max_batch=max_batch,
                                      max_wait_ms=max_wait_ms,
                                      pending_cap=queue_depth,
-                                     adaptive_wait=adaptive_wait)
+                                     adaptive_wait=adaptive_wait,
+                                     registry=self.obs)
         self._thread: threading.Thread | None = None
         self._running = False
         self._draining = False       # swap in progress: shed new admissions
@@ -162,8 +217,29 @@ class SearchServer:
         self.n_errors = 0
         self.n_swaps = 0
         self.n_overflowed = 0        # served rows whose heap latched overflow
+        self.n_padded = 0            # summed pad-waste lanes of served rows
         self.batch_hist: dict[int, int] = {}     # real batch size -> count
         self.dispatch_s = 0.0                    # engine wall time, summed
+        # registry mirrors of the counters above + the stage histograms
+        req = "repro_server_requests_total"
+        self._m_req = {o: self.obs.counter(req, {"outcome": o},
+                                           "requests by terminal outcome")
+                       for o in ("submitted", "served", "shed", "error",
+                                 "cache_hit")}
+        self._m_swaps = self.obs.counter("repro_server_swaps_total", None,
+                                         "engine hot-swaps completed")
+        self._m_overflow = self.obs.counter(
+            "repro_server_overflow_rows_total", None,
+            "served rows whose search heap latched overflow")
+        self._m_padded = self.obs.counter(
+            "repro_server_padded_lanes_total", None,
+            "dead beam lanes paid for by served rows (pad waste)")
+        self._m_dispatch = self.obs.histogram(
+            "repro_dispatch_seconds", None, "engine wall time per batch")
+        self._m_stage = {s: self.obs.histogram(
+            "repro_request_stage_seconds", {"stage": s},
+            "per-request latency by pipeline stage")
+            for s in ("queue_wait", "device", "slice", "total")}
 
     # -- lifecycle -----------------------------------------------------------
 
@@ -252,8 +328,11 @@ class SearchServer:
             raise RuntimeError("server not started")
         key = self._normalize(words, profile)
         ticket = Ticket(key, profile)
+        if self.obs.enabled:
+            ticket.timeline = Timeline(ticket.t_submit)
         with self._lock:
             self.n_submitted += 1
+        self._m_req["submitted"].inc()
         cached = self.cache.get((key, profile, self._tag))
         if cached is not None:
             ticket.cache_hit = True
@@ -261,16 +340,22 @@ class SearchServer:
             ticket._complete(result=cached)
             with self._lock:
                 self.n_served += 1
+            self._m_req["served"].inc()
+            self._m_req["cache_hit"].inc()
+            self._record_stages(ticket)
             return ticket
         lane = self._lane_of(key)
         with self._lock:
             if self._draining:
                 self.n_shed += 1
+                self._m_req["shed"].inc()
                 raise ShedError("engine swap in progress (draining); "
                                 "retry shortly")
             # counted before the put so a swap can never observe 0 while an
             # admitted request is still on its way to the dispatch thread
             self._n_inflight += 1
+        if ticket.timeline is not None:
+            ticket.timeline.mark("admit")
         try:
             self._queue.put_nowait((key, profile, ticket, time.monotonic(),
                                     lane))
@@ -278,6 +363,7 @@ class SearchServer:
             with self._lock:
                 self._n_inflight -= 1
                 self.n_shed += 1
+            self._m_req["shed"].inc()
             raise ShedError(f"admission queue full "
                             f"({self._queue.maxsize} deep); retry later")
         return ticket
@@ -314,6 +400,8 @@ class SearchServer:
                         f"drain did not finish in {drain_timeout}s "
                         f"({self._n_inflight} requests still in flight)")
                 time.sleep(0.001)
+            if hasattr(new_engine, "obs_registry"):
+                new_engine.obs_registry = self.obs
             old, self.engine = self.engine, new_engine
             self._tag = getattr(new_engine, "content_tag", None)
             if not self._heavy_df_explicit:     # re-derive for the new corpus
@@ -321,6 +409,7 @@ class SearchServer:
             self.cache.clear()
             with self._lock:
                 self.n_swaps += 1
+            self._m_swaps.inc()
             return old
         finally:
             with self._lock:
@@ -335,10 +424,21 @@ class SearchServer:
             if batch is not None:
                 self._dispatch(batch)
 
+    def _record_stages(self, ticket: Ticket) -> None:
+        """Fold one completed ticket's span timeline into the per-stage
+        latency histograms (no-op when the registry is disabled)."""
+        if ticket.timeline is None:
+            return
+        for stage, dt in stage_durations(ticket.timeline).items():
+            self._m_stage[stage].observe(dt)
+
     def _dispatch(self, batch: Batch):
         t0 = time.monotonic()
         for t in batch.items:
             t.t_dispatch = t0
+            if t.timeline is not None:
+                t.timeline.mark("dispatch", t0)
+        for t in batch.items:
             t.batch_size = batch.n_real
         try:
             res = self.engine.search(batch.queries,
@@ -346,19 +446,40 @@ class SearchServer:
         except Exception as e:                    # profile-level failure
             for t in batch.items:
                 t._complete(error=e)
+            self._m_req["error"].inc(batch.n_real)
             with self._lock:
                 self.n_errors += batch.n_real
                 self._n_inflight -= batch.n_real
             return
+        if self.obs.enabled:
+            # force device completion so the device/slice split is real
+            # (values are unchanged — DESIGN.md §10 exactness argument)
+            np.asarray(res.docs)
+            t_dev = time.monotonic()
+            for t in batch.items:
+                if t.timeline is not None:
+                    t.timeline.mark("device", t_dev)
         dt = time.monotonic() - t0
         rows = _slice_rows(res, batch.n_real)
-        n_over = 0
+        if self.obs.enabled:
+            t_slice = time.monotonic()
+            for t in batch.items:
+                if t.timeline is not None:
+                    t.timeline.mark("slice", t_slice)
+        n_over = n_pad = 0
         for t, row in zip(batch.items, rows):
             self.cache.put((t.words, t.profile, self._tag), row)
             t._complete(result=row)
+            self._record_stages(t)
             n_over += bool(row.overflowed)
+            n_pad += row.padded or 0
+        self._m_req["served"].inc(batch.n_real)
+        self._m_overflow.inc(n_over)
+        self._m_padded.inc(n_pad)
+        self._m_dispatch.observe(dt)
         with self._lock:
             self.n_overflowed += n_over
+            self.n_padded += n_pad
             self.n_served += batch.n_real
             self._n_inflight -= batch.n_real
             self.batch_hist[batch.n_real] = \
@@ -369,9 +490,17 @@ class SearchServer:
 
     @property
     def stats(self) -> dict:
+        # Two-phase snapshot: the server's own counters come out under the
+        # server lock (mutually consistent), then the engine and cache are
+        # asked for *their* snapshots outside it — each is internally
+        # consistent under its own lock, and taking the engine reference
+        # under the server lock means a concurrent swap_engine can never
+        # double-count (we read one engine's stats, whole, never a blend of
+        # old and new).
         with self._lock:
+            engine = self.engine
             n_batches = sum(self.batch_hist.values())
-            return {
+            out = {
                 "submitted": self.n_submitted,
                 "served": self.n_served,
                 "shed": self.n_shed,
@@ -380,15 +509,18 @@ class SearchServer:
                 "inflight": self._n_inflight,
                 "engine_tag": self._tag,
                 "overflowed": self.n_overflowed,
+                "padded": self.n_padded,
                 "dispatches": n_batches,
                 "batch_hist": dict(sorted(self.batch_hist.items())),
                 "mean_batch": sum(b * c for b, c in self.batch_hist.items())
                               / n_batches if n_batches else 0.0,
                 "dispatch_s": self.dispatch_s,
-                "cache": self.cache.stats,
-                "executors": self.engine.stats["executors"],
-                "traces": sum(self.engine.stats["traces"].values()),
             }
+        out["cache"] = self.cache.stats
+        estats = engine.stats          # dict-shaped for dummy engines too
+        out["executors"] = estats["executors"]
+        out["traces"] = sum(estats["traces"].values())
+        return out
 
 
 def _slice_rows(res, n_real: int) -> list[RowResult]:
@@ -400,6 +532,8 @@ def _slice_rows(res, n_real: int) -> list[RowResult]:
     work = np.asarray(res.work)
     pops = None if res.pops is None else np.asarray(res.pops)
     over = None if res.overflowed is None else np.asarray(res.overflowed)
+    pad = getattr(res, "padded", None)       # dummy engines may omit the field
+    pad = None if pad is None else np.asarray(pad)
     mp = None if res.match_pos is None else np.asarray(res.match_pos)
     ml = None if res.match_len is None else np.asarray(res.match_len)
     return [RowResult(
@@ -408,5 +542,6 @@ def _slice_rows(res, n_real: int) -> list[RowResult]:
         measure=res.measure,
         pops=None if pops is None else int(pops[b]),
         overflowed=None if over is None else bool(over[b]),
+        padded=None if pad is None else int(pad[b]),
         match_pos=None if mp is None else mp[b],
         match_len=None if ml is None else ml[b]) for b in range(n_real)]

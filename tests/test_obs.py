@@ -1,0 +1,511 @@
+"""repro.obs — observability subsystem contract tests (DESIGN.md §10).
+
+Pins, in order of importance:
+
+* **bitwise neutrality** — enabling the registry must not change any ranked
+  answer (observation happens on host copies after device values exist);
+* **disabled is free** — with the registry off, no timeline is allocated,
+  no observation lands, and a recording call is a cheap checked no-op;
+* **histogram exactness** — percentile reconstruction is exact for integer
+  observations below 2*SUBBUCKETS and within 1/SUBBUCKETS relative error
+  elsewhere; p0/p100 are the tracked exact extremes;
+* **diagnostics threading** — DRResult.padded/overflowed reach
+  SearchResults -> RowResult -> server stats/registry on the plain, mega,
+  and sharded paths;
+* **stats under concurrency** — SearchServer.stats is safe to hammer while
+  traffic flows and never blends two engines across swap_engine.
+"""
+import json
+import threading
+import time
+import types
+import urllib.request
+
+import numpy as np
+import pytest
+
+import repro.obs as obs
+from repro.engine import EngineConfig, SearchEngine
+from repro.obs.metrics import SUBBUCKETS, bucket_hi, bucket_lo
+from repro.obs.tracing import Timeline, stage_durations
+from repro.serve import QueryProfile, SearchServer, loadgen
+from repro.serve.server import RowResult, _slice_rows
+from repro.text import corpus
+
+
+@pytest.fixture(scope="module")
+def obs_corpus():
+    return corpus.make_corpus(n_docs=100, mean_doc_len=50, vocab_size=400,
+                              seed=21)
+
+
+@pytest.fixture(scope="module")
+def obs_engine(obs_corpus):
+    return SearchEngine.build(obs_corpus, EngineConfig(block=512))
+
+
+@pytest.fixture(scope="module")
+def obs_queries(obs_engine):
+    return loadgen.sample_queries(obs_engine, 16, 3, seed=5)
+
+
+# ---------------------------------------------------------------------------
+# metrics: histogram exactness + primitives
+# ---------------------------------------------------------------------------
+
+def test_histogram_exact_for_small_integers():
+    """Integer observations < 2*SUBBUCKETS live in width-<=1 buckets, so
+    nearest-rank reconstruction equals numpy's inverted_cdf exactly — the
+    'exact p50/p95/p99' claim for work counters and batch sizes."""
+    rng = np.random.default_rng(0)
+    reg = obs.Registry(enabled=True)
+    h = reg.histogram("work")
+    vals = rng.integers(1, 2 * SUBBUCKETS, size=2000)
+    h.observe_many(vals.tolist())
+    for q in (1, 25, 50, 75, 95, 99):
+        want = float(np.percentile(vals, q, method="inverted_cdf"))
+        assert h.quantile(q) == want, q
+
+
+def test_histogram_relative_error_bound():
+    rng = np.random.default_rng(1)
+    reg = obs.Registry(enabled=True)
+    h = reg.histogram("lat")
+    vals = rng.lognormal(mean=-5.0, sigma=2.0, size=5000)
+    h.observe_many(vals.tolist())
+    for q in (50, 90, 95, 99):
+        want = float(np.percentile(vals, q, method="inverted_cdf"))
+        got = h.quantile(q)
+        assert got <= want                        # bucket LOWER bound
+        assert (want - got) / want <= 1.0 / SUBBUCKETS + 1e-12, q
+
+
+def test_histogram_extremes_zeros_and_buckets():
+    reg = obs.Registry(enabled=True)
+    h = reg.histogram("h")
+    h.observe_many([0.0, 0.0, 0.25, 3.0, 1000.0])
+    assert h.quantile(0) == 0.0 and h.quantile(100) == 1000.0   # exact min/max
+    assert h.quantile(30) == 0.0                  # zeros bucket
+    assert h.n == 5 and h.n_zero == 2
+    assert h.mean == pytest.approx((0.25 + 3.0 + 1000.0) / 5)
+    # bucket geometry: lo/hi bracket every value, width = 2^e / SUBBUCKETS
+    for v in (0.25, 3.0, 1000.0, 1e-9, 7.99):
+        from repro.obs.metrics import bucket_index
+        i = bucket_index(v)
+        assert bucket_lo(i) <= v < bucket_hi(i), v
+
+
+def test_registry_disabled_records_nothing():
+    reg = obs.Registry(enabled=False)
+    c, g, h = reg.counter("c"), reg.gauge("g"), reg.histogram("h")
+    c.inc(5), g.set(3.0), h.observe(1.0)
+    assert c.value == 0 and g.value == 0.0 and h.n == 0
+    reg.enabled = True
+    c.inc(5), g.set(3.0), h.observe(1.0)
+    assert c.value == 5 and g.value == 3.0 and h.n == 1
+
+
+def test_registry_get_or_create_and_kind_guard():
+    reg = obs.Registry(enabled=True)
+    assert reg.counter("x", {"a": "1"}) is reg.counter("x", {"a": "1"})
+    assert reg.counter("x", {"a": "1"}) is not reg.counter("x", {"a": "2"})
+    with pytest.raises(TypeError, match="already registered"):
+        reg.gauge("x", {"a": "1"})
+
+
+def test_default_registry_enable_and_use():
+    assert obs.default_registry().enabled is False     # process default: off
+    mine = obs.Registry(enabled=True)
+    with obs.use(mine):
+        assert obs.default_registry() is mine
+        obs.default_registry().counter("k").inc()
+    assert obs.default_registry() is not mine
+    assert mine.counter("k").value == 1
+
+
+def test_disabled_recording_is_cheap():
+    """The disabled path is one attr load + branch — pin a generous ceiling
+    so a lock/allocation sneaking in fails loudly (DESIGN.md §10 budget)."""
+    reg = obs.Registry(enabled=False)
+    c, h = reg.counter("c"), reg.histogram("h")
+    n = 50_000
+    t0 = time.perf_counter()
+    for _ in range(n):
+        c.inc()
+        h.observe(1.0)
+    per_call_us = (time.perf_counter() - t0) / (2 * n) * 1e6
+    assert per_call_us < 5.0, f"{per_call_us:.2f}us per disabled record"
+
+
+# ---------------------------------------------------------------------------
+# tracing
+# ---------------------------------------------------------------------------
+
+def test_timeline_spans_and_stage_durations():
+    tl = Timeline(100.0)
+    for stage, t in (("admit", 100.5), ("lane_enqueue", 100.6),
+                     ("batch_form", 101.0), ("dispatch", 101.5),
+                     ("device", 103.5), ("slice", 103.6), ("complete", 103.7)):
+        tl.mark(stage, t)
+    d = stage_durations(tl)
+    assert d["queue_wait"] == pytest.approx(1.5)       # submit -> dispatch
+    assert d["device"] == pytest.approx(2.0)           # dispatch -> device
+    assert d["slice"] == pytest.approx(0.1)
+    assert d["total"] == pytest.approx(3.7)
+    # partial timelines (e.g. cache hit: no dispatch) drop missing stages
+    tl2 = Timeline(0.0)
+    tl2.mark("complete", 0.001)
+    d2 = stage_durations(tl2)
+    assert "device" not in d2 and d2["total"] == pytest.approx(0.001)
+
+
+# ---------------------------------------------------------------------------
+# exporters
+# ---------------------------------------------------------------------------
+
+def _filled_registry() -> obs.Registry:
+    reg = obs.Registry(enabled=True)
+    reg.counter("repro_c_total", {"x": "1"}, "a counter").inc(3)
+    reg.gauge("repro_g", None, "a gauge").set(2.5)
+    h = reg.histogram("repro_h_seconds", {"stage": "s"}, "a histogram")
+    h.observe_many([0.0, 0.001, 0.002, 0.5, 3.0])
+    return reg
+
+
+def test_prometheus_rendering_parses_and_is_cumulative():
+    text = obs.render_prometheus(_filled_registry())
+    lines = [l for l in text.splitlines() if l and not l.startswith("#")]
+    assert 'repro_c_total{x="1"} 3' in lines
+    assert "repro_g 2.5" in lines
+    buckets = []
+    for l in lines:
+        if l.startswith("repro_h_seconds_bucket"):
+            le = l.split('le="')[1].split('"')[0]
+            buckets.append((float("inf") if le == "+Inf" else float(le),
+                            int(l.rsplit(" ", 1)[1])))
+    assert buckets == sorted(buckets)          # le ascending, counts cumulative
+    assert buckets[-1] == (float("inf"), 5)
+    assert [c for _, c in buckets] == sorted(c for _, c in buckets)
+    assert "repro_h_seconds_count" in text and "repro_h_seconds_sum" in text
+    # every sample line parses as "name{labels} value"
+    for l in lines:
+        name_part, val = l.rsplit(" ", 1)
+        float(val)
+        assert name_part.startswith("repro_")
+
+
+def test_jsonl_snapshot_roundtrip(tmp_path):
+    reg = _filled_registry()
+    line = obs.snapshot_line(reg)
+    d = json.loads(line)
+    assert d["metrics"]['repro_c_total{x="1"}'] == 3
+    assert d["metrics"]['repro_h_seconds{stage="s"}']["count"] == 5
+    p = tmp_path / "m.jsonl"
+    obs.write_jsonl(p, reg)
+    obs.write_jsonl(p, reg)
+    assert len(p.read_text().splitlines()) == 2
+    snap = obs.dump(reg, p)
+    assert snap == reg.snapshot()
+    assert len(p.read_text().splitlines()) == 3
+
+
+def test_metrics_http_server_scrape():
+    reg = _filled_registry()
+    with obs.MetricsServer(reg, port=0) as srv:
+        body = urllib.request.urlopen(
+            f"http://127.0.0.1:{srv.port}/metrics", timeout=10).read().decode()
+        assert 'repro_c_total{x="1"} 3' in body
+        j = json.loads(urllib.request.urlopen(
+            f"http://127.0.0.1:{srv.port}/metrics.json", timeout=10).read())
+        assert j["metrics"]["repro_g"] == 2.5
+        with pytest.raises(urllib.error.HTTPError):
+            urllib.request.urlopen(
+                f"http://127.0.0.1:{srv.port}/nope", timeout=10)
+
+
+# ---------------------------------------------------------------------------
+# serving integration: spans, stage histograms, neutrality, overhead
+# ---------------------------------------------------------------------------
+
+def _dummy_engine(delay_s: float = 0.0, padded=None):
+    def search(queries, **kw):
+        if delay_s:
+            time.sleep(delay_s)
+        B = len(queries)
+        k = kw.get("k") or 3
+        ns = types.SimpleNamespace(
+            docs=np.tile(np.arange(k, dtype=np.int32), (B, 1)),
+            scores=np.zeros((B, k), np.float32),
+            n_found=np.full(B, k, np.int32), work=np.ones(B, np.int32),
+            pops=None, overflowed=None, match_pos=None, match_len=None,
+            k=k, mode=kw.get("mode", "and"), strategy="dr", measure="tfidf")
+        if padded is not None:
+            ns.padded = np.full(B, padded, np.int32)
+        return ns
+    return types.SimpleNamespace(
+        search=search, model=types.SimpleNamespace(vocab_size=100),
+        stats={"executors": 0, "traces": {}},
+        warmup=lambda *a, **kw: 0)
+
+
+def test_server_spans_and_stage_histograms_with_registry():
+    reg = obs.Registry(enabled=True)
+    eng = _dummy_engine(delay_s=0.002)
+    with SearchServer(eng, max_batch=4, max_wait_ms=5.0, cache_size=16,
+                      registry=reg) as server:
+        tickets = [server.submit([1 + i % 7]) for i in range(12)]
+        rows = [t.result(timeout=10.0) for t in tickets]
+        hit = server.submit([1])               # replay -> cache-hit span
+        hit.result(timeout=10.0)
+    assert all(r.n_found == 3 for r in rows)
+    # every dispatched ticket carries the full span taxonomy
+    tl = tickets[0].timeline
+    stages = [s for s, _ in tl.marks]
+    assert stages[0] == "submit" and stages[-1] == "complete"
+    for s in ("admit", "lane_enqueue", "batch_form", "dispatch", "device",
+              "slice"):
+        assert s in stages, s
+    ts = [t for _, t in tl.marks]
+    assert ts == sorted(ts)                    # marks are monotonic
+    assert hit.cache_hit and hit.timeline is not None
+    # the ticket's decomposition is exact: queue_wait + service == latency
+    for t in tickets:
+        assert t.queue_wait_s + t.service_s == pytest.approx(t.latency_s)
+    # registry: stage histograms saw every dispatched request, counters agree
+    by_stage = {dict(h.labels)["stage"]: h
+                for h in reg.find("repro_request_stage_seconds")}
+    assert by_stage["device"].n == 12
+    assert by_stage["total"].n == 13           # cache hit records total too
+    assert by_stage["queue_wait"].n == 12
+    served = [c for c in reg.find("repro_server_requests_total")
+              if dict(c.labels)["outcome"] == "served"][0]
+    assert served.value == 13 == server.stats["served"]
+    hits = reg.find("repro_cache_hits_total")[0]
+    assert hits.value == 1 == server.stats["cache"]["hits"]
+    assert reg.find("repro_batch_size")        # per-lane batch histogram
+    assert reg.find("repro_dispatch_seconds")[0].n == \
+        server.stats["dispatches"]
+
+
+def test_server_disabled_registry_allocates_nothing():
+    eng = _dummy_engine()
+    reg = obs.Registry(enabled=False)
+    with SearchServer(eng, max_batch=4, cache_size=0,
+                      registry=reg) as server:
+        t = server.submit([3])
+        t.result(timeout=10.0)
+    assert t.timeline is None                  # no span allocation when off
+    for m in reg.metrics():
+        v = m._snapshot()
+        assert (v == 0 or v == 0.0 or
+                (isinstance(v, dict) and v["count"] == 0)), m.name
+
+
+def test_instrumentation_is_bitwise_neutral(obs_engine, obs_queries):
+    """Identical queries with the registry off and on: every ranked leaf is
+    bitwise equal — observation reads results, it never feeds back."""
+    kw = dict(k=6, mode="or", strategy="dr")
+    base = obs_engine.search(obs_queries[:4], **kw)
+    reg = obs.Registry(enabled=True)
+    with obs.use(reg):
+        inst = obs_engine.search(obs_queries[:4], **kw)
+    assert reg.find("repro_engine_searches_total")     # it DID record
+    for name in ("docs", "scores", "n_found", "work", "pops"):
+        np.testing.assert_array_equal(np.asarray(getattr(base, name)),
+                                      np.asarray(getattr(inst, name)),
+                                      err_msg=name)
+
+
+def test_engine_records_work_and_roofline(obs_engine, obs_queries):
+    reg = obs.Registry(enabled=True)
+    with obs.use(reg):
+        res = obs_engine.search(obs_queries[:3], k=5, mode="or",
+                                strategy="dr")
+    pops_h = reg.find("repro_engine_pops")[0]
+    assert pops_h.n == 3
+    assert pops_h.total == float(np.asarray(res.pops).sum())
+    fracs = reg.find("repro_roofline_achieved_frac")
+    assert fracs and 0.0 < fracs[0].value      # live gauge exported
+    bpq = reg.find("repro_roofline_bytes_per_query")[0].value
+    assert bpq > 0.0
+    rows = [c for c in reg.find("repro_engine_rows_total")][0]
+    assert rows.value == 3
+
+
+# ---------------------------------------------------------------------------
+# satellite 3: diagnostics threading (padded/overflowed end to end)
+# ---------------------------------------------------------------------------
+
+def test_slice_rows_threads_padded_per_row():
+    res = types.SimpleNamespace(
+        docs=np.zeros((3, 2), np.int32), scores=np.zeros((3, 2), np.float32),
+        n_found=np.ones(3, np.int32), work=np.ones(3, np.int32),
+        pops=np.array([4, 5, 6]), overflowed=np.array([False, True, False]),
+        padded=np.array([0, 2, 7]), match_pos=None, match_len=None,
+        k=2, mode="or", strategy="dr", measure="tfidf")
+    rows = _slice_rows(res, 2)                 # pad row 2 dropped
+    assert [r.padded for r in rows] == [0, 2]
+    assert [r.overflowed for r in rows] == [False, True]
+    assert [r.pops for r in rows] == [4, 5]
+    # engines that report no padded diagnostics (dummy/legacy) -> None
+    del res.padded
+    assert all(r.padded is None for r in _slice_rows(res, 2))
+
+
+def test_padded_threads_engine_to_server_stats(obs_engine, obs_queries):
+    """DR beam search reports pad-waste; it must reach RowResult, the
+    server's stats dict, and the registry counter un-mangled."""
+    res = obs_engine.search(obs_queries[:2], k=5, mode="or", strategy="dr",
+                            beam_width=4)
+    assert res.padded is not None
+    want = int(np.asarray(res.padded).sum())
+    reg = obs.Registry(enabled=True)
+    profile = QueryProfile(mode="or", strategy="dr", k=5, beam_width=4)
+    with SearchServer(obs_engine, max_batch=2, max_wait_ms=50.0,
+                      cache_size=0, registry=reg) as server:
+        t0 = server.submit(obs_queries[0], profile)
+        t1 = server.submit(obs_queries[1], profile)
+        rows = [t0.result(timeout=60.0), t1.result(timeout=60.0)]
+    got = [r.padded for r in rows]
+    assert all(p is not None for p in got)
+    # batched serving may batch the two rows together or not; either way the
+    # per-row diagnostic sums match the direct batched search
+    if server.stats["batch_hist"] == {2: 1}:
+        assert got == [int(p) for p in np.asarray(res.padded)]
+        assert server.stats["padded"] == want
+    assert server.stats["padded"] == sum(got)
+    assert reg.find("repro_server_padded_lanes_total")[0].value == sum(got)
+    obs_engine.obs_registry = None             # unpin the module fixture
+
+
+def test_diagnostics_thread_mega_path(obs_engine, obs_queries):
+    """The pool-frontier megabatch core pops exactly one segment per live
+    row per trip — zero pad lanes by construction — so ``padded`` is None
+    end to end, while pops/overflowed still thread per row."""
+    res = obs_engine.search(obs_queries[:3], k=5, mode="or", strategy="dr",
+                            mega=True)
+    assert res.padded is None and res.overflowed is not None
+    assert res.pops is not None
+    rows = _slice_rows(res, 3)
+    assert all(r.padded is None for r in rows)
+    assert [r.pops for r in rows] == [int(p) for p in np.asarray(res.pops)]
+    assert [r.overflowed for r in rows] == \
+        [bool(o) for o in np.asarray(res.overflowed)]
+    # contrast: the lockstep beam path DOES report pad waste
+    lock = obs_engine.search(obs_queries[:3], k=5, mode="or", strategy="dr",
+                             beam_width=4)
+    assert lock.padded is not None
+
+
+@pytest.mark.slow
+def test_padded_threads_sharded_path(obs_corpus):
+    """n_shards=1 on the single CPU device: the sharded merge must psum and
+    return padded (DR/DRB-AND), and report None only for DRB/OR."""
+    eng = SearchEngine.shard(obs_corpus, n_shards=1,
+                             config=EngineConfig(block=512))
+    qs = loadgen.sample_queries(eng, 4, 2, seed=5)
+    res = eng.search(qs, k=5, mode="or", strategy="dr", beam_width=2)
+    assert res.padded is not None
+    assert np.asarray(res.padded).shape == (4,)
+    single = SearchEngine.build(obs_corpus, EngineConfig(block=512))
+    sres = single.search(qs, k=5, mode="or", strategy="dr", beam_width=2)
+    np.testing.assert_array_equal(np.asarray(res.padded),
+                                  np.asarray(sres.padded))
+    rows = _slice_rows(res, 4)
+    assert all(r.padded is not None for r in rows)
+    assert _slice_rows(eng.search(qs, k=5, mode="or", strategy="drb",
+                                  measure="bm25"), 4)[0].padded is None
+
+
+# ---------------------------------------------------------------------------
+# satellite 1: stats under concurrency / across swap
+# ---------------------------------------------------------------------------
+
+def test_stats_safe_under_concurrent_traffic():
+    eng = _dummy_engine(delay_s=0.001)
+    errors = []
+    with SearchServer(eng, max_batch=4, max_wait_ms=1.0, cache_size=8,
+                      queue_depth=128) as server:
+        stop = threading.Event()
+
+        def reader():
+            while not stop.is_set():
+                try:
+                    st = server.stats
+                    assert st["served"] <= st["submitted"]
+                    assert set(st["cache"]) == {"hits", "misses", "hit_rate",
+                                                "size", "capacity"}
+                except Exception as e:          # pragma: no cover
+                    errors.append(e)
+                    return
+        readers = [threading.Thread(target=reader) for _ in range(3)]
+        for r in readers:
+            r.start()
+        tickets = [server.submit([1 + i % 9]) for i in range(60)]
+        for t in tickets:
+            t.result(timeout=10.0)
+        stop.set()
+        for r in readers:
+            r.join()
+    assert not errors
+    assert server.stats["served"] == 60
+
+
+def test_stats_never_blend_engines_across_swap():
+    eng_a = _dummy_engine()
+    eng_a.stats = {"executors": 1, "traces": {"a": 1}}
+    eng_a.content_tag = 0xA
+    eng_b = _dummy_engine()
+    eng_b.stats = {"executors": 7, "traces": {"b": 3}}
+    eng_b.content_tag = 0xB
+    with SearchServer(eng_a, max_batch=2, cache_size=4) as server:
+        server.submit([1]).result(timeout=10.0)
+        st = server.stats
+        assert (st["executors"], st["traces"], st["engine_tag"]) == (1, 1, 0xA)
+        server.swap_engine(eng_b)
+        st = server.stats
+        assert (st["executors"], st["traces"], st["engine_tag"]) == (7, 3, 0xB)
+        assert st["swaps"] == 1
+        server.submit([1]).result(timeout=10.0)     # still serves post-swap
+    assert server.stats["served"] == 2
+
+
+# ---------------------------------------------------------------------------
+# loadgen: queue/service split (satellite 2)
+# ---------------------------------------------------------------------------
+
+def test_loadreport_splits_queue_and_service():
+    eng = _dummy_engine(delay_s=0.005)
+    with SearchServer(eng, max_batch=4, max_wait_ms=1.0,
+                      cache_size=0) as server:
+        rep = loadgen.closed_loop(server, [[1 + i % 9] for i in range(24)],
+                                  n_workers=6)
+    assert rep.n_ok == 24
+    assert len(rep.queue_ms) == 24 and len(rep.service_ms) == 24
+    for p in ("queue_p50_ms", "queue_p99_ms", "service_p50_ms",
+              "service_p99_ms"):
+        assert np.isfinite(getattr(rep, p)), p
+    # service includes the 5ms engine sleep; queue wait is bounded by the
+    # 1ms coalescing budget plus backlog
+    assert rep.service_p50_ms >= 5.0
+    assert "queue p50" in rep.summary() and "service p50" in rep.summary()
+    # the decomposition is exact in aggregate: sum(total) == sum(q) + sum(s)
+    assert rep.latencies_ms.sum() == pytest.approx(
+        rep.queue_ms.sum() + rep.service_ms.sum(), rel=1e-9)
+    assert rep.stages is None                  # registry off -> no breakdown
+
+
+def test_loadreport_stage_breakdown_with_registry():
+    reg = obs.Registry(enabled=True)
+    eng = _dummy_engine(delay_s=0.002)
+    with SearchServer(eng, max_batch=4, max_wait_ms=1.0, cache_size=0,
+                      registry=reg) as server:
+        rep = loadgen.open_loop(server, [[1 + i % 9] for i in range(20)],
+                                target_qps=400.0, timeout_s=30.0)
+    assert rep.n_ok == 20
+    assert rep.stages is not None
+    for s in ("queue_wait", "device", "slice", "total"):
+        assert s in rep.stages
+        assert rep.stages[s]["count"] > 0
+        assert np.isfinite(rep.stages[s]["p99_ms"])
+    assert rep.stages["total"]["count"] == 20
