@@ -6,16 +6,19 @@
 Prints ``name,us_per_call,derived`` CSV rows (the harness contract).
 ``--json PATH`` additionally writes the rows as a machine-readable artifact
 (``{"bench": {name: us_per_call}, "beam_sweep": {...}, "serving": {...},
-"megabatch": {...}}`` — the BENCH_PR9.json artifact that carries the perf
-trajectory; beam-sweep entries hold iters/pops ratios vs P=1, serving
-entries the table 6 throughput/percentile/cache metrics — every serving
-entry now also carries the queue-wait/service percentile split, and the
-``open_obs`` entry the registry-derived per-stage latency attribution
-(queue_wait/device/slice/total) plus the live WTBC roofline gauges
-(bytes/query, achieved fraction per kernel backend) — megabatch entries the
-table 7 skew/heavy-band tail latencies for mega vs lockstep vs unbatched
-serving).  The artifact is also mirrored into ``artifacts/`` so the
-committed trajectory and the CI upload stay in one place.
+"megabatch": {...}, "anytime": {...}}`` — the BENCH_PR10.json artifact that
+carries the perf trajectory; beam-sweep entries hold iters/pops ratios vs
+P=1, serving entries the table 6 throughput/percentile/cache metrics —
+every serving entry now also carries the queue-wait/service percentile
+split, and the ``open_obs`` entry the registry-derived per-stage latency
+attribution (queue_wait/device/slice/total) plus the live WTBC roofline
+gauges (bytes/query, achieved fraction per kernel backend) — megabatch
+entries the table 7 skew/heavy-band tail latencies for mega vs lockstep vs
+unbatched serving — anytime entries the table 8 budget ladder
+(latency/recall/certified-fraction per rung) plus the served monotone
+p99-vs-certified-fraction Pareto ``frontier``).  The artifact is also
+mirrored into ``artifacts/`` so the committed trajectory and the CI upload
+stay in one place.
 """
 from __future__ import annotations
 
@@ -42,7 +45,7 @@ def main() -> None:
     from benchmarks import (common, distributed_scaling, table1_compression,
                             table2_conjunctive, table3_bagofwords,
                             table4_positional, table5_beam, table6_serving,
-                            table7_megabatch)
+                            table7_megabatch, table8_anytime)
 
     rows: dict[str, float] = {}
 
@@ -88,6 +91,7 @@ def main() -> None:
                            with_sharded=not args.skip_distributed)
     serving = table6_serving.run(bench, print_rows=collect)
     megabatch = table7_megabatch.run(bench, print_rows=collect)
+    anytime = table8_anytime.run(bench, print_rows=collect)
 
     if not args.skip_distributed:
         distributed_scaling.run(print_rows=collect)
@@ -107,7 +111,7 @@ def main() -> None:
     if args.json:
         with open(args.json, "w") as f:
             json.dump({"bench": rows, "beam_sweep": beam, "serving": serving,
-                       "megabatch": megabatch,
+                       "megabatch": megabatch, "anytime": anytime,
                        "config": {"docs": args.docs, "full": args.full}},
                       f, indent=2, sort_keys=True)
         print(f"# wrote {args.json}", file=sys.stderr)

@@ -208,8 +208,14 @@ def distributed_topk(sharded: ShardedWTBC, words: jnp.ndarray, wmask: jnp.ndarra
     method: 'dr-and' | 'dr-or' | 'drb-and' | 'drb-or'.
     shard_axes: mesh axis (or axes tuple) the documents are sharded over; the
     total device count along them must equal ``sharded.n_shards``.
-    max_pops: per-shard any-time budget for the DR methods (straggler
-    mitigation, see module docstring); None = run each shard to completion.
+    max_pops: per-shard any-time budget for the loop cores (DR and DRB-AND;
+    straggler mitigation, see module docstring); None = run each shard to
+    completion.  The merged result carries global anytime metadata
+    (DESIGN.md §11): the global pending bound is the max over the shards'
+    bounds, and a merged slot is certified iff its score *strictly* beats
+    that bound — strict because a score tie across shards could hide a
+    lower-doc-id tie winner behind another shard's frontier (conservative:
+    a certified-at-a-tie local slot may come back uncertified merged).
     idf: (V,) replicated scoring table; defaults to ``sharded.global_idf``
     (tf-idf form).  Pass a measure-specific table (derivable from
     ``sharded.global_df``) so shard scores match the single-host backend.
@@ -240,7 +246,7 @@ def distributed_topk(sharded: ShardedWTBC, words: jnp.ndarray, wmask: jnp.ndarra
     # lane count; every other method threads `padded` through the merge so
     # the serving/obs layer sees the same diagnostics sharded as single-host
     has_pad = method != "drb-or"
-    out_specs = (P(),) * (7 if has_pad else 6)
+    out_specs = (P(),) * (9 if has_pad else 8)
 
     def local(sh: ShardedWTBC, words, wmask, idf_tab):
         batched = words.ndim == 2                      # (B, Q) query batches
@@ -257,7 +263,8 @@ def distributed_topk(sharded: ShardedWTBC, words: jnp.ndarray, wmask: jnp.ndarra
                 return drb_mod.topk_drb_and(idx, aux, words1, wmask1, measure,
                                             k=k, idf=idf_tab,
                                             avg_dl=sh.global_avg_dl,
-                                            beam_width=beam_width)
+                                            beam_width=beam_width,
+                                            max_pops=max_pops)
             if method == "drb-or":
                 return drb_mod.topk_drb_or(idx, aux, words1, wmask1, measure,
                                            k=k, max_df_cap=max_df_cap,
@@ -288,24 +295,45 @@ def distributed_topk(sharded: ShardedWTBC, words: jnp.ndarray, wmask: jnp.ndarra
             all_s = jnp.moveaxis(jax.lax.all_gather(all_s, ax), 0, -2)
             all_d = all_d.reshape(*all_d.shape[:-2], -1)
             all_s = all_s.reshape(*all_s.shape[:-2], -1)
-        top_s, ti = jax.lax.top_k(all_s, k)
+        # (k+1)-wide merge: slot k's score is the best candidate the merge
+        # DROPS — a known document not in the result, folded into the
+        # reported bound below.  top_k tie-breaks toward the earliest
+        # gathered index = the smallest global doc id (shard blocks are
+        # doc-ordered and so is each shard's list), matching the
+        # single-host tie order, so a dropped tie-loser always ranks after
+        # every retained slot.
+        kk = min(k + 1, all_s.shape[-1])
+        top_s, ti = jax.lax.top_k(all_s, kk)
+        dropped_s = (top_s[..., k] if kk > k
+                     else jnp.full(top_s.shape[:-1], -jnp.inf, jnp.float32))
+        top_s, ti = top_s[..., :k], ti[..., :k]
         top_d = jnp.take_along_axis(all_d, ti, axis=-1)
         n_found = jnp.sum(top_s > -jnp.inf, axis=-1).astype(jnp.int32)
-        # work metrics sum over shards; overflow is any-shard
+        # work metrics sum over shards; overflow is any-shard; the pending
+        # bound is max-over-shards (a hidden doc on any shard is bounded by
+        # its own shard's pending threshold)
         iters, pops, over = res.iters, res.pops, res.overflowed.astype(jnp.int32)
-        padded = res.padded
+        padded, bound = res.padded, res.bound
         for ax in axes:
             iters = jax.lax.psum(iters, ax)
             pops = jax.lax.psum(pops, ax)
             over = jax.lax.psum(over, ax)
+            bound = jax.lax.pmax(bound, ax)
             if has_pad:
                 padded = jax.lax.psum(padded, ax)
+        # certification is strict-score vs the global *pending* bound (see
+        # the docstring); the reported bound additionally covers the docs
+        # the merge itself dropped
+        certified = ((top_s > bound[..., None])
+                     & ~(over > 0)[..., None] & (top_s > -jnp.inf))
+        bound_out = jnp.maximum(bound, dropped_s)
         out = (jnp.where(top_s > -jnp.inf, top_d, -1), top_s, n_found, iters,
-               pops, over > 0)
+               pops, over > 0, certified, bound_out)
         return out + (padded,) if has_pad else out
 
     fn = _shard_map(local, mesh=mesh, in_specs=in_specs, out_specs=out_specs)
     res = fn(sharded, words, wmask, idf)
-    docs, scores, n_found, iters, pops, over = res[:6]
+    docs, scores, n_found, iters, pops, over, certified, bound = res[:8]
     return ranked.DRResult(docs, scores, n_found, iters, pops, over,
-                           padded=res[6] if has_pad else None)
+                           padded=res[8] if has_pad else None,
+                           certified=certified, bound=bound)

@@ -127,12 +127,14 @@ def word_occ(aux: DRBAux, w: jnp.ndarray) -> jnp.ndarray:
 # conjunctive (AND) — the paper's triplet walk
 # ---------------------------------------------------------------------------
 
-@functools.partial(jax.jit, static_argnames=("k", "measure", "beam_width"))
+@functools.partial(jax.jit, static_argnames=("k", "measure", "beam_width",
+                                             "max_pops"))
 def topk_drb_and(idx: WTBCIndex, aux: DRBAux, words: jnp.ndarray,
                  wmask: jnp.ndarray, measure, *, k: int,
                  idf: jnp.ndarray | None = None,
                  avg_dl: jnp.ndarray | None = None,
-                 beam_width: int = 1) -> DRResult:
+                 beam_width: int = 1,
+                 max_pops: int | None = None) -> DRResult:
     """Paper §3.2 conjunctive search.  O(df_min) candidate iterations; each
     iteration verifies ``beam_width`` (= P) candidate documents of the rarest
     word at once — P locates, then one fused batched descent for all P×Q
@@ -153,6 +155,14 @@ def topk_drb_and(idx: WTBCIndex, aux: DRBAux, words: jnp.ndarray,
     total order (score desc, doc asc), so the retained set — score ties at
     the k boundary included — is independent of P and of candidate arrival
     order.  ``beam_width=1`` is step-for-step the paper's triplet walk.
+
+    ``max_pops`` is the anytime budget in *candidate documents examined*
+    (the ``pops`` work leaf).  Unlike DR, the walk visits candidates in
+    document order, not score order, so certification is all-or-nothing
+    (DESIGN.md §11): a completed walk is exact (every slot certified,
+    ``bound`` -inf); a budget-stopped walk has examined an arbitrary score
+    mix (no slot certified, ``bound`` +inf — an unexamined candidate may
+    score anything).
     """
     Q = words.shape[0]
     P = int(beam_width)
@@ -171,9 +181,15 @@ def topk_drb_and(idx: WTBCIndex, aux: DRBAux, words: jnp.ndarray,
     nd0 = jnp.where(valid, df_w, INT32_MAX)
     topk0 = H.topk_make(k)
 
+    def has_work(nd):
+        return (jnp.min(nd) > 0) & jnp.any(valid) & ~absent
+
     def cond(st):
         p, nd, topk, it, cands, padded = st
-        return (jnp.min(nd) > 0) & jnp.any(valid) & ~absent & (it < idx.n_docs + 1)
+        ok = has_work(nd) & (it < idx.n_docs + 1)
+        if max_pops is not None:
+            ok = ok & (cands < max_pops)
+        return ok
 
     def body(st):
         p, nd, topk, it, cands, padded = st
@@ -228,9 +244,12 @@ def topk_drb_and(idx: WTBCIndex, aux: DRBAux, words: jnp.ndarray,
                      jnp.int32(0)))
     res = H.topk_sorted(topk)
     found = jnp.sum(res.scores > -jnp.inf).astype(jnp.int32)
+    complete = ~has_work(nd)   # stopped because done, not because budgeted
     return DRResult(jnp.where(res.scores > -jnp.inf, res.docs, -1),
                     res.scores, found, iters, cands, jnp.zeros((), bool),
-                    padded)
+                    padded,
+                    certified=(res.scores > -jnp.inf) & complete,
+                    bound=jnp.where(complete, H.NEG_INF, jnp.float32(jnp.inf)))
 
 
 # ---------------------------------------------------------------------------
@@ -293,6 +312,8 @@ def topk_drb_or(idx: WTBCIndex, aux: DRBAux, words: jnp.ndarray,
 
     top_s, top_d = jax.lax.top_k(scores, k)
     found = jnp.sum(top_s > -jnp.inf).astype(jnp.int32)
+    # loop-free dense pass: always exhaustive, hence always fully certified
     return DRResult(jnp.where(top_s > -jnp.inf, top_d, -1).astype(jnp.int32),
                     top_s.astype(jnp.float32), found, jnp.int32(max_df_cap),
-                    jnp.int32(max_df_cap), jnp.zeros((), bool))
+                    jnp.int32(max_df_cap), jnp.zeros((), bool),
+                    certified=top_s > -jnp.inf, bound=H.NEG_INF)

@@ -66,6 +66,52 @@ def _pool_insert(pool, s, d0, d1, tf, enable, overflowed):
     return (pool_s, pool_d0, pool_d1, pool_tf), overflowed
 
 
+def _mega_finalize(pool, out_docs, out_scores, n_out, overflowed, *, k: int,
+                   harvest: bool):
+    """Row-parallel anytime epilogue — the dense-pool analogue of
+    ``ranked._anytime_finalize`` (same harvest order, same pending bound,
+    same certification rule; DESIGN.md §11).  Because the pool holds exactly
+    the segments the serial heap would hold at the same pop count, every
+    leaf this produces is bitwise equal to the serial core's row-for-row.
+    """
+    pool_s, pool_d0, pool_d1, _ = pool
+    B = pool_s.shape[0]
+    row = jnp.arange(B, dtype=jnp.int32)
+    valid = pool_s > H.NEG_INF
+    single = valid & ((pool_d1 - pool_d0) == 1)
+    remaining = valid
+
+    if harvest:
+        def step(_, st):
+            out_docs, out_scores, n_out, sing = st
+            j = H.lex_argmax(pool_s, pool_d0, pool_d1, sing)
+            write = jnp.any(sing, axis=1) & (n_out < k)
+            at = jnp.where(write, n_out, k)
+            out_docs = out_docs.at[row, at].set(
+                jnp.where(write, pool_d0[row, j], out_docs[row, at]))
+            out_scores = out_scores.at[row, at].set(
+                jnp.where(write, pool_s[row, j], out_scores[row, at]))
+            sing = sing.at[row, j].set(sing[row, j] & ~write)
+            return (out_docs, out_scores, n_out + write.astype(jnp.int32),
+                    sing)
+
+        out_docs, out_scores, n_out, left = jax.lax.fori_loop(
+            0, k, step, (out_docs, out_scores, n_out, single))
+        remaining = (valid & ~single) | left
+
+    has_rem = jnp.any(remaining, axis=1)
+    j = H.lex_argmax(pool_s, pool_d0, pool_d1, remaining)
+    bnd_s = jnp.where(has_rem, pool_s[row, j], H.NEG_INF)
+    bnd_d0 = jnp.where(has_rem, pool_d0[row, j], H.INT32_MAX)
+    bnd_d1 = jnp.where(has_rem, pool_d1[row, j], H.INT32_MIN)
+    filled = (jnp.arange(out_docs.shape[1], dtype=jnp.int32)[None, :]
+              < n_out[:, None])
+    certified = filled & ~overflowed[:, None] & H.lex_gt(
+        out_scores, out_docs, out_docs + 1,
+        bnd_s[:, None], bnd_d0[:, None], bnd_d1[:, None])
+    return out_docs, out_scores, n_out, certified[:, :k], bnd_s
+
+
 @functools.partial(jax.jit,
                    static_argnames=("k", "conjunctive", "cap", "max_pops",
                                     "fused"))
@@ -197,7 +243,10 @@ def topk_dr_mega(idx: WTBCIndex, words: jnp.ndarray, wmask: jnp.ndarray,
     st0 = (pool, out_docs, out_scores, jnp.zeros((B,), jnp.int32),
            jnp.zeros((B,), jnp.int32), jnp.zeros((B,), jnp.int32),
            overflowed0)
-    (_, out_docs, out_scores, n_out, iters, pops,
+    (pool, out_docs, out_scores, n_out, iters, pops,
      overflowed) = jax.lax.while_loop(cond, body, st0)
+    out_docs, out_scores, n_out, certified, bound = _mega_finalize(
+        pool, out_docs, out_scores, n_out, overflowed, k=k,
+        harvest=max_pops is not None)
     return DRResult(out_docs[:, :k], out_scores[:, :k], n_out, iters, pops,
-                    overflowed)
+                    overflowed, certified=certified, bound=bound)

@@ -87,6 +87,15 @@ class DRResult(NamedTuple):
     # buckets keep this near zero; None on cores without beam padding (mega,
     # brute force, sharded merge).
     padded: jnp.ndarray | None = None
+    # (k,) bool — anytime certification (DESIGN.md §11): slot i is certified
+    # iff its key lex-beats the pending bound at the stopping point, i.e. it
+    # provably equals the exact oracle's slot i.  All-True whenever the
+    # search ran to completion; certified bits always form a prefix.
+    certified: jnp.ndarray | None = None
+    # () float32 — score upper bound on every document NOT in ``docs``
+    # (the lex-max pending segment score at stop); -inf when the frontier
+    # was exhausted, i.e. nothing relevant remains.
+    bound: jnp.ndarray | None = None
 
 
 def count_words_range(idx: WTBCIndex, words: jnp.ndarray,
@@ -237,6 +246,63 @@ def _bucket_index(n_live, buckets):
     return sum((n_live > w).astype(jnp.int32) for w in buckets[:-1])
 
 
+def _anytime_finalize(hp: H.Heap, out_docs, out_scores, n_out, *, k: int,
+                      harvest: bool):
+    """Anytime epilogue of one row (DESIGN.md §11): harvest + certify.
+
+    Runs after the while_loop on the per-row heap state.  Two steps:
+
+    1. **Harvest** (only when an anytime budget was in play): fill the
+       remaining output slots best-k-so-far with the lex-greatest pending
+       *singleton* segments — real documents with exact scores, just not yet
+       proven to beat every hidden document.  When the budget never bound,
+       the loop only exits with ``n_out == k`` or an empty heap, so the
+       harvest writes nothing and every leaf is bitwise what it was.
+    2. **Certify**: the pending bound is the lex-max key over everything
+       still in the heap (multis bound all their descendants by key
+       monotonicity; singletons bound themselves).  A slot is certified iff
+       its own key ``(score, d, d+1)`` lex-beats that bound — emitted slots
+       always do (the emission rule already proved them against the whole
+       pending set, whose keys only decrease); harvested slots only when no
+       hidden document can outrank them.  ``overflowed`` voids the bound (a
+       dropped push's descendants are unaccounted for), so it vetoes
+       certification.
+
+    Returns ``(out_docs, out_scores, n_out, certified (k,), bound ())``.
+    """
+    s, d0, d1 = hp.scores, hp.payload[:, 0], hp.payload[:, 1]
+    valid = jnp.arange(hp.cap, dtype=jnp.int32) < hp.size
+    single = valid & ((d1 - d0) == 1)
+    remaining = valid
+
+    if harvest:
+        def step(_, st):
+            out_docs, out_scores, n_out, sing = st
+            j = H.lex_argmax(s, d0, d1, sing)
+            write = jnp.any(sing) & (n_out < k)
+            at = jnp.where(write, n_out, k)
+            out_docs = out_docs.at[at].set(
+                jnp.where(write, d0[j], out_docs[at]))
+            out_scores = out_scores.at[at].set(
+                jnp.where(write, s[j], out_scores[at]))
+            sing = sing.at[j].set(sing[j] & ~write)
+            return out_docs, out_scores, n_out + write.astype(jnp.int32), sing
+
+        out_docs, out_scores, n_out, left = jax.lax.fori_loop(
+            0, k, step, (out_docs, out_scores, n_out, single))
+        remaining = (valid & ~single) | left
+
+    has_rem = jnp.any(remaining)
+    j = H.lex_argmax(s, d0, d1, remaining)
+    bnd_s = jnp.where(has_rem, s[j], H.NEG_INF)
+    bnd_d0 = jnp.where(has_rem, d0[j], H.INT32_MAX)
+    bnd_d1 = jnp.where(has_rem, d1[j], H.INT32_MIN)
+    filled = jnp.arange(out_docs.shape[0], dtype=jnp.int32) < n_out
+    certified = filled & ~hp.overflowed & H.lex_gt(
+        out_scores, out_docs, out_docs + 1, bnd_s, bnd_d0, bnd_d1)
+    return out_docs, out_scores, n_out, certified[:k], bnd_s
+
+
 @functools.partial(jax.jit,
                    static_argnames=("k", "conjunctive", "heap_cap", "max_pops",
                                     "beam_width"))
@@ -286,8 +352,10 @@ def topk_dr(idx: WTBCIndex, words: jnp.ndarray, wmask: jnp.ndarray,
 
     hp, out_docs, out_scores, n_out, iters, pops, padded = \
         jax.lax.while_loop(cond, body, st0)
+    out_docs, out_scores, n_out, certified, bound = _anytime_finalize(
+        hp, out_docs, out_scores, n_out, k=k, harvest=max_pops is not None)
     return DRResult(out_docs[:k], out_scores[:k], n_out, iters, pops,
-                    hp.overflowed, padded)
+                    hp.overflowed, padded, certified, bound)
 
 
 @functools.partial(jax.jit,
@@ -357,8 +425,12 @@ def topk_dr_batch(idx: WTBCIndex, words: jnp.ndarray, wmask: jnp.ndarray,
 
     hp, out_docs, out_scores, n_out, iters, pops, padded = \
         jax.lax.while_loop(cond, body, st0)
+    out_docs, out_scores, n_out, certified, bound = jax.vmap(
+        functools.partial(_anytime_finalize, k=k,
+                          harvest=max_pops is not None))(
+        hp, out_docs, out_scores, n_out)
     return DRResult(out_docs[:, :k], out_scores[:, :k], n_out, iters, pops,
-                    hp.overflowed, padded)
+                    hp.overflowed, padded, certified, bound)
 
 
 # ---------------------------------------------------------------------------
@@ -388,4 +460,5 @@ def topk_bruteforce(idx: WTBCIndex, words, wmask, idf, *, k: int,
     found = jnp.sum(top_s > -jnp.inf).astype(jnp.int32)
     top_d = jnp.where(top_s > -jnp.inf, top_d, -1)
     return DRResult(top_d.astype(jnp.int32), top_s, found, jnp.int32(n_docs),
-                    jnp.int32(n_docs), jnp.zeros((), bool))
+                    jnp.int32(n_docs), jnp.zeros((), bool),
+                    certified=top_s > -jnp.inf, bound=H.NEG_INF)

@@ -402,7 +402,9 @@ def space_report(idx: WTBCIndex) -> dict[str, int]:
     def nbytes(a):
         return int(np.asarray(a).nbytes)
     report = {
-        "level_bytes": sum(int(l.length) for l in idx.levels),
+        # l.length is a scalar on single-host indexes and a per-shard vector
+        # on sharded ones — sum over whatever shape it has
+        "level_bytes": sum(int(np.asarray(l.length).sum()) for l in idx.levels),
         "rank_counters": sum(nbytes(l.counts) for l in idx.levels),
         "node_offsets": sum(nbytes(o) for o in idx.offsets),
         "codeword_tables": nbytes(idx.cw) + nbytes(idx.cw_len)

@@ -10,6 +10,16 @@ import dataclasses
 
 from repro.core import bytemap
 
+# SLA degradation ladder (DESIGN.md §11), best to worst:
+#   exact       — run to completion, every slot provably the oracle's slot;
+#                 deadlines are rejected (an exact search cannot be cut short)
+#   bounded     — honor an anytime budget / wall deadline; results carry
+#                 per-slot certified bits + a score upper bound for the rest
+#   best_effort — like bounded, but the serving layer may shrink the budget
+#                 further under load instead of shedding
+# (shedding is the serving layer's fourth rung — the engine never sheds.)
+SLA_CLASSES = ("exact", "bounded", "best_effort")
+
 
 @dataclasses.dataclass(frozen=True)
 class EngineConfig:
@@ -50,6 +60,9 @@ class EngineConfig:
                parity configuration).  Resolved once per search into the
                executor key, so a changed force/env never serves a stale
                compiled program.
+    default_sla: the SLA class ``search`` assumes when called without ``sla``
+               and without any anytime knob (``budget`` / ``deadline_ms``
+               auto-promote "exact" to "bounded"); one of ``SLA_CLASSES``.
     """
     block: int = bytemap.DEFAULT_BLOCK
     eps: float = 1e-6
@@ -59,6 +72,7 @@ class EngineConfig:
     default_beam_width: int = 1
     default_mega: bool = False
     kernel_backend: str = "auto"
+    default_sla: str = "exact"
 
     def __post_init__(self):
         if self.block <= 0:
@@ -76,3 +90,6 @@ class EngineConfig:
         if self.default_beam_width <= 0:
             raise ValueError(f"default_beam_width must be positive, got "
                              f"{self.default_beam_width}")
+        if self.default_sla not in SLA_CLASSES:
+            raise ValueError(f"default_sla must be one of {SLA_CLASSES}, "
+                             f"got {self.default_sla!r}")

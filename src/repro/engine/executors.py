@@ -86,7 +86,8 @@ def make_single_drb(key: ExecutorKey, *, note):
         def one(idx, aux, w, m, idf, avg_dl):
             return drb.topk_drb_and(idx, aux, w, m, measure, k=key.k,
                                     idf=idf, avg_dl=avg_dl,
-                                    beam_width=key.beam_width)
+                                    beam_width=key.beam_width,
+                                    max_pops=key.budget)
     else:
         def one(idx, aux, w, m, idf, avg_dl):
             return drb.topk_drb_or(idx, aux, w, m, measure, k=key.k,

@@ -35,13 +35,18 @@ import repro.obs as obs
 from repro.core import distributed, drb, positional, scoring, wtbc
 from repro.engine import executors
 from repro.kernels import backend as kernel_backend
-from repro.engine.config import EngineConfig
+from repro.engine.config import EngineConfig, SLA_CLASSES
 from repro.engine.results import SearchResults
 
 MODES = ("and", "or", "phrase", "near")
 POSITIONAL_MODES = ("phrase", "near")
 STRATEGIES = ("dr", "drb", "auto")
 MEASURES = {"tfidf": scoring.TfIdf(), "bm25": scoring.BM25()}
+
+# cold-start pop cost (µs) assumed by the deadline -> budget conversion until
+# the engine has observed real traffic (see SearchEngine.us_per_pop);
+# deliberately pessimistic so a deadline is honored even before warmup
+DEFAULT_US_PER_POP = 50.0
 
 
 def pow2_bucket(n: int) -> int:
@@ -50,6 +55,18 @@ def pow2_bucket(n: int) -> int:
     batch dim B) to these buckets, so mixed traffic reuses a small fixed set
     of compiled programs instead of one program per exact shape."""
     return 1 << max(0, int(n) - 1).bit_length()
+
+
+def budget_bucket(n: int) -> int:
+    """Largest power of FOUR <= n (n >= 1) — the anytime-budget quantizer.
+    ``budget`` is static in the executor key (the loop bound is compiled in),
+    so a deadline-derived budget — which drifts with the live us/pop estimate
+    — must be quantized or every estimate update would compile a fresh
+    program.  Powers of four keep the whole useful range [1, 2*n_docs) within
+    a handful of buckets while never overshooting the deadline (floor, not
+    ceil: rounding the budget *down* can only finish earlier)."""
+    n = max(1, int(n))
+    return 1 << ((n.bit_length() - 1) & ~1)
 
 
 def _normalize_docs(docs, vocab_size: int | None):
@@ -108,7 +125,8 @@ class SearchEngine:
         self._avg_dl = None
         self._executors: dict[executors.ExecutorKey, Any] = {}
         self._trace_counts: dict[executors.ExecutorKey, int] = {}
-        self._stats_lock = threading.Lock()     # _executors/_trace_counts
+        self._us_per_pop: float | None = None   # EWMA, None until observed
+        self._stats_lock = threading.Lock()     # _executors/_trace_counts/EWMA
         # None -> record into the live process default (obs.enable()/use());
         # the serving frontend pins its own registry here on adoption
         self.obs_registry: "obs.Registry | None" = None
@@ -326,13 +344,13 @@ class SearchEngine:
             strategy = "dr" if measure.dr_compatible else "drb"
         if strategy == "dr":
             scoring.assert_dr_compatible(measure)   # BM25 + "dr" -> ValueError
-        else:
-            if not self.config.with_drb:
-                raise ValueError("this engine was built with with_drb=False; "
-                                 "only strategy='dr' is available")
-            if budget is not None:
-                raise ValueError("budget (any-time max_pops) applies to the "
-                                 "DR strategy only")
+        elif not self.config.with_drb:
+            raise ValueError("this engine was built with with_drb=False; "
+                             "only strategy='dr' is available")
+        # DRB/AND honors budget (candidate-iteration cap, all-or-nothing
+        # certification); the loop-free DRB/OR path normalizes it off
+        # post-routing in search() — one serving profile carries the knob
+        # across strategy routing without erroring on the exact paths.
         return strategy
 
     def _df_cap(self, ranks: np.ndarray, mask: np.ndarray) -> int:
@@ -342,6 +360,42 @@ class SearchEngine:
         m = int(self._df_np[ranks[mask]].max()) if mask.any() else 1
         cap = 1 << int(m + 2 - 1).bit_length()
         return min(cap, self._max_df_cap)
+
+    # -- anytime cost model (DESIGN.md §11) ----------------------------------
+
+    def note_cost(self, seconds: float, pops_per_row: float) -> None:
+        """Feed the live us/pop estimator one observed batch: ``seconds`` of
+        blocking wall time against the mean per-row pop count (rows run
+        vmapped in parallel, so the per-row count is what the wall clock
+        tracks).  Called from the observed search path and from the serving
+        dispatcher; EWMA so bursts move it quickly but one straggler does
+        not poison the estimate."""
+        if pops_per_row <= 0 or seconds <= 0:
+            return
+        us = seconds * 1e6 / float(pops_per_row)
+        with self._stats_lock:
+            prev = self._us_per_pop
+            self._us_per_pop = us if prev is None else 0.8 * prev + 0.2 * us
+
+    @property
+    def us_per_pop(self) -> float:
+        """Live cost estimate (µs of wall time per heap pop per row);
+        ``DEFAULT_US_PER_POP`` until real traffic has been observed."""
+        with self._stats_lock:
+            est = self._us_per_pop
+        return DEFAULT_US_PER_POP if est is None else est
+
+    def budget_for_deadline(self, deadline_ms: float) -> int | None:
+        """Pop budget affordable within ``deadline_ms`` at the live us/pop
+        estimate, floor-quantized to a :func:`budget_bucket` so estimate
+        drift never recompiles.  Returns None when the exhaustive search
+        provably fits the deadline (a DR search pops < 2*n_docs + 2 segments
+        — each split consumes one and adds at most two over < n_docs splits)
+        — the caller then runs the plain exact executor, no key split."""
+        pops = int(float(deadline_ms) * 1e3 / self.us_per_pop)
+        if pops >= 2 * self.n_docs + 2:
+            return None
+        return budget_bucket(max(1, pops))
 
     @property
     def _obs(self) -> "obs.Registry":
@@ -392,7 +446,8 @@ class SearchEngine:
 
     def warmup(self, queries, *, max_batch: int = 1, k: int | None = None,
                mode: str = "and", strategy: str = "auto", measure="tfidf",
-               budget: int | None = None, window: int | None = None,
+               budget: int | None = None, sla: str | None = None,
+               window: int | None = None,
                beam_width: int | None = None,
                df_cap: int | None = None,
                mega: bool | None = None) -> int:
@@ -421,8 +476,8 @@ class SearchEngine:
             reps.setdefault(pow2_bucket(max(1, len(r))), r)
         before = sum(self._trace_counts.values())
         kw = dict(k=k, mode=mode, strategy=strategy, measure=measure,
-                  budget=budget, window=window, beam_width=beam_width,
-                  df_cap=df_cap, mega=mega)
+                  budget=budget, sla=sla, window=window,
+                  beam_width=beam_width, df_cap=df_cap, mega=mega)
         n_b = pow2_bucket(max_batch).bit_length()     # 1, 2, 4, ..., bucket
         for r in reps.values():
             row = [int(w) for w in r]
@@ -433,6 +488,8 @@ class SearchEngine:
     def search(self, queries, *, k: int | None = None, mode: str = "and",
                strategy: str = "auto", measure="tfidf",
                budget: int | None = None,
+               deadline_ms: float | None = None,
+               sla: str | None = None,
                window: int | None = None,
                beam_width: int | None = None,
                df_cap: int | None = None,
@@ -449,8 +506,26 @@ class SearchEngine:
                   DR when the measure allows it, else DRB (e.g. BM25).
                   phrase/near always run on the bare WTBC ("dr").
         measure:  "tfidf", "bm25", or a scoring object.
-        budget:   DR any-time pop budget (per shard when sharded); exact
-                  search when None.  DR and/or only.
+        budget:   anytime work budget (per shard when sharded): DR heap pops /
+                  DRB-AND candidate iterations; exact search when None.
+                  Results carry per-slot ``certified`` bits and a
+                  ``score_bound`` for whatever the budget cut off (DESIGN.md
+                  §11); a budget that never binds is bitwise identical to
+                  the exact search.  Normalized off on the loop-free DRB/OR
+                  path; rejected on phrase/near (always exhaustive).
+        deadline_ms: wall-clock target converted to a ``budget`` via the live
+                  us/pop estimate (:meth:`budget_for_deadline`), quantized
+                  to pow-4 buckets so estimate drift never recompiles.
+                  Combines with an explicit ``budget`` by min.  Advisory,
+                  not a hard timer — the loop bound is compiled in, the
+                  engine never interrupts a running kernel.
+        sla:      "exact", "bounded", or "best_effort" (default:
+                  ``config.default_sla``, auto-promoted to "bounded" when
+                  ``budget``/``deadline_ms`` is given).  "exact" *rejects*
+                  anytime knobs — callers pinning sla="exact" can never be
+                  silently degraded; "bounded" and "best_effort" differ only
+                  in how the serving layer treats them under load (the
+                  engine itself runs them identically).
         window:   proximity width in tokens, mode="near" only (default:
                   ``config.default_window``).  Traced — varying it reuses
                   the compiled executor.
@@ -488,6 +563,21 @@ class SearchEngine:
             raise ValueError(f"k must be positive, got {k}")
         if mode not in MODES:
             raise ValueError(f"unknown mode {mode!r}; expected one of {MODES}")
+        if sla is not None and sla not in SLA_CLASSES:
+            raise ValueError(f"unknown sla {sla!r}; expected one of "
+                             f"{SLA_CLASSES}")
+        if deadline_ms is not None and float(deadline_ms) <= 0:
+            raise ValueError(f"deadline_ms must be positive, got {deadline_ms}")
+        anytime = budget is not None or deadline_ms is not None
+        sla = sla or ("bounded" if anytime else self.config.default_sla)
+        if sla == "exact" and anytime:
+            raise ValueError("sla='exact' guarantees an uninterrupted search "
+                             "— budget/deadline_ms require sla='bounded' or "
+                             "'best_effort'")
+        if deadline_ms is not None:
+            db = self.budget_for_deadline(deadline_ms)
+            if db is not None:
+                budget = db if budget is None else min(int(budget), db)
         if mode == "near":
             window = self.config.default_window if window is None else int(window)
             if window < 1:
@@ -496,7 +586,19 @@ class SearchEngine:
             raise ValueError(f"window applies to mode='near' only "
                              f"(got mode={mode!r})")
         m = self._resolve_measure(measure)
+        if mode in POSITIONAL_MODES and deadline_ms is not None:
+            raise ValueError("deadline_ms applies to the anytime and/or "
+                             f"search cores only (got mode={mode!r}); "
+                             "positional searches are always exhaustive")
         strat = self._resolve_strategy(strategy, m, budget, mode)
+        if budget is not None:
+            budget = int(budget)
+            if budget < 1:
+                raise ValueError(f"budget must be >= 1, got {budget}")
+            if strat == "drb" and mode == "or":
+                budget = None   # loop-free gather: always complete/certified
+            elif budget >= 2 * self.n_docs + 2:
+                budget = None   # can never bind: run the plain exact program
         if mode in POSITIONAL_MODES:
             if beam_width is not None:
                 raise ValueError("beam_width applies to the looped and/or "
@@ -573,7 +675,10 @@ class SearchEngine:
                              beam_width=beam_width,
                              pops=getattr(res, "pops", None),
                              overflowed=getattr(res, "overflowed", None),
-                             padded=getattr(res, "padded", None))
+                             padded=getattr(res, "padded", None),
+                             certified=getattr(res, "certified", None),
+                             score_bound=getattr(res, "bound", None),
+                             sla=sla)
 
     def _record_search(self, reg: "obs.Registry", key, res, shape, t0):
         """Registry side of one observed search (enabled registries only):
@@ -606,6 +711,14 @@ class SearchEngine:
             reg.histogram("repro_engine_pops", labels,
                           "candidate pops per query row"
                           ).observe_many(pops.tolist())
+            if key.budget is None and len(pops):
+                # feed the deadline->budget estimator from *unbudgeted*
+                # batches only: a budget-cut batch's wall time hides the
+                # harvest tail and would bias us/pop optimistic
+                self.note_cost(dt, float(pops.mean()))
+            reg.gauge("repro_engine_us_per_pop", None,
+                      "live pop cost estimate feeding deadline budgets"
+                      ).set(self.us_per_pop)
         if padded is not None:
             padded = np.asarray(padded).ravel()
             reg.histogram("repro_engine_pad_lanes", labels,

@@ -43,6 +43,16 @@ class SearchResults:
              padded = lanes the loop actually paid for.  The active-frontier
              buckets (core/ranked.py) keep this near zero; None on paths
              without beam padding.
+    certified: (B, k) bool — anytime certification (DESIGN.md §11): a True
+             slot provably equals the exact oracle's slot; always a prefix
+             per row, and all-True whenever the search ran to completion.
+             None on the positional paths (which are always exhaustive).
+    score_bound: (B,) float32 — per-row score upper bound on every document
+             NOT in ``docs`` (-inf when the frontier was exhausted); the
+             honest "how wrong can the uncertified tail be" dial.  None on
+             the positional paths.
+    sla:     the resolved SLA class this search ran under ("exact",
+             "bounded", or "best_effort" — see engine/config.SLA_CLASSES).
     """
     docs: jnp.ndarray
     scores: jnp.ndarray
@@ -58,6 +68,9 @@ class SearchResults:
     pops: jnp.ndarray | None = None
     overflowed: jnp.ndarray | None = None
     padded: jnp.ndarray | None = None
+    certified: jnp.ndarray | None = None
+    score_bound: jnp.ndarray | None = None
+    sla: str = "exact"
 
     def __post_init__(self):
         if self.docs.ndim != 2 or self.scores.shape != self.docs.shape:
@@ -95,6 +108,16 @@ class SearchResults:
         """(B, k) numpy view of the document ids (-1 padded)."""
         return np.asarray(self.docs)
 
+    def certified_fraction(self) -> float:
+        """Certified slots / found slots over the whole batch (1.0 when the
+        backend reports no certification data — exhaustive paths are exact)."""
+        if self.certified is None:
+            return 1.0
+        found = int(np.sum(np.asarray(self.n_found)))
+        if found == 0:
+            return 1.0
+        return float(np.sum(np.asarray(self.certified))) / found
+
     @property
     def diagnostics(self) -> dict:
         """Per-query health/work counters as host arrays.
@@ -106,11 +129,17 @@ class SearchResults:
         larger ``heap_cap`` or queried with a smaller k) and ``padded``
         (dead beam lanes paid for — the pad-waste metric of the
         active-frontier buckets)."""
-        out = {"work": np.asarray(self.work), "beam_width": self.beam_width}
+        out = {"work": np.asarray(self.work), "beam_width": self.beam_width,
+               "sla": self.sla}
         if self.pops is not None:
             out["pops"] = np.asarray(self.pops)
         if self.overflowed is not None:
             out["overflowed"] = np.asarray(self.overflowed)
         if self.padded is not None:
             out["padded"] = np.asarray(self.padded)
+        if self.certified is not None:
+            out["certified"] = np.asarray(self.certified)
+            out["certified_fraction"] = self.certified_fraction()
+        if self.score_bound is not None:
+            out["score_bound"] = np.asarray(self.score_bound)
         return out

@@ -19,6 +19,14 @@ back-to-back clients); a positive value runs the open-loop Poisson shape.
 ``--smoke`` exits non-zero unless the run was healthy (finite p99, zero
 shed) — the CI serving smoke job drives exactly this.
 
+Deadlines & SLA classes (DESIGN.md §11): ``--deadline-ms`` asks for
+anytime answers — admission converts the wall target into a pop budget at
+the live us/pop estimate and every response carries per-slot certified
+bits.  ``--sla best_effort`` additionally lets overload shrink budgets
+(degraded serving) before shedding; ``--retries N`` adds client-side
+jittered-backoff retries on shed.  The CI ``anytime-smoke`` job drives
+these flags end to end.
+
 Observability (DESIGN.md §10): ``--metrics`` enables the process
 :mod:`repro.obs` registry (span timelines, per-stage histograms, live
 roofline gauges); ``--metrics-port N`` additionally serves Prometheus text
@@ -96,6 +104,20 @@ def main():
     ap.add_argument("--words", type=int, default=3, help="words per query")
     ap.add_argument("--window", type=int, default=None)
     ap.add_argument("--budget", type=int, default=None)
+    ap.add_argument("--deadline-ms", type=float, default=None,
+                    help="per-request wall target: admission converts it to "
+                         "a pop budget at the live us/pop estimate "
+                         "(DESIGN.md §11); answers carry certified bits")
+    ap.add_argument("--sla", default=None,
+                    choices=("exact", "bounded", "best_effort"),
+                    help="SLA class (default: engine config; auto-'bounded' "
+                         "when --budget/--deadline-ms is given).  'exact' "
+                         "rejects anytime knobs; 'best_effort' additionally "
+                         "lets overload shrink budgets before shedding")
+    ap.add_argument("--retries", type=int, default=0,
+                    help="client-side retry budget on shed (jittered "
+                         "exponential backoff; the report prints the "
+                         "attempts histogram)")
     ap.add_argument("--beam-width", type=int, default=None)
     ap.add_argument("--mega", action="store_true",
                     help="route DR and/or batches through the pool-frontier "
@@ -190,7 +212,8 @@ def main():
         k=args.k, window=args.window, budget=args.budget,
         beam_width=args.beam_width,
         df_cap=engine.suggested_df_cap(queries) if routed_drb else None,
-        mega=True if args.mega else None)
+        mega=True if args.mega else None,
+        sla=args.sla, deadline_ms=args.deadline_ms)
 
     server = SearchServer(engine, max_batch=args.max_batch,
                           max_wait_ms=args.max_wait_ms,
@@ -209,16 +232,20 @@ def main():
     print(f"compiled {n} executors; admitting traffic", flush=True)
 
     workload = loadgen.zipf_workload(queries, args.requests, seed=args.seed)
+    retry = loadgen.RetryPolicy(max_retries=args.retries, seed=args.seed) \
+        if args.retries else loadgen.NO_RETRY
     if stats_thread is not None:
         stats_thread.start()
     with server:
         if args.target_qps > 0:
             rep = loadgen.open_loop(server, workload,
                                     target_qps=args.target_qps,
-                                    profile=profile, seed=args.seed)
+                                    profile=profile, seed=args.seed,
+                                    retry=retry)
         else:
             rep = loadgen.closed_loop(server, workload,
-                                      n_workers=args.workers, profile=profile)
+                                      n_workers=args.workers, profile=profile,
+                                      retry=retry)
     stats_stop.set()
 
     retraces = sum(engine.stats["traces"].values()) - traces0
@@ -246,8 +273,14 @@ def main():
               "their rankings may be incomplete (rebuild with a larger "
               "heap_cap or query a smaller k)")
     if args.smoke:
+        # deadline traffic may recompile when the live us/pop estimate
+        # drifts across a pow-4 bucket boundary mid-run; the bucketing
+        # bounds that to a handful of rungs, never per-request churn
+        retrace_ok = retraces == 0 if args.deadline_ms is None \
+            else retraces <= 4
         healthy = (np.isfinite(rep.p99_ms) and rep.n_shed == 0
-                   and st["errors"] == 0 and retraces == 0
+                   and st["errors"] == 0 and retrace_ok
+                   and rep.n_timeout == 0
                    and rep.n_ok == args.requests)
         print(f"smoke: {'PASS' if healthy else 'FAIL'}")
         sys.exit(0 if healthy else 1)

@@ -84,6 +84,12 @@ class QueryProfile:
     should be pinned (``SearchEngine.suggested_df_cap``) for
     ``strategy='drb', mode='or'`` traffic so the gather width — normally
     derived per batch — stays static across mixed batches.
+
+    ``sla``/``deadline_ms`` are *admission-time* knobs (DESIGN.md §11): the
+    server resolves them into a concrete ``budget`` + ``sla`` *effective
+    profile* at submit (``deadline_ms`` never reaches the engine), so two
+    requests degrade into the same effective profile batch together and the
+    cache can never replay a degraded answer for an exact request.
     """
     mode: str = "and"
     strategy: str = "auto"
@@ -94,12 +100,17 @@ class QueryProfile:
     beam_width: int | None = None
     df_cap: int | None = None
     mega: bool | None = None
+    sla: str | None = None
+    deadline_ms: float | None = None
 
     def search_kwargs(self) -> dict:
+        # deadline_ms is deliberately absent: the serving layer folds it
+        # into ``budget`` at admission; direct engine.search callers pass
+        # their own deadline_ms explicitly
         return dict(mode=self.mode, strategy=self.strategy,
                     measure=self.measure, k=self.k, window=self.window,
                     budget=self.budget, beam_width=self.beam_width,
-                    df_cap=self.df_cap, mega=self.mega)
+                    df_cap=self.df_cap, mega=self.mega, sla=self.sla)
 
 
 @dataclasses.dataclass

@@ -25,7 +25,30 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import wtbc
-from repro.serve.server import DEFAULT_PROFILE, SearchServer, ShedError
+from repro.serve.server import (DEFAULT_PROFILE, RequestTimeout, SearchServer,
+                                ShedError)
+
+
+@dataclasses.dataclass(frozen=True)
+class RetryPolicy:
+    """Bounded jittered exponential backoff for :class:`ShedError` retries.
+
+    A shed is the server telling the client "elsewhere, or later" —
+    retrying instantly would synchronize the rejected cohort into a retry
+    storm, so each attempt waits ``base_ms * 2**attempt`` plus uniform
+    jitter of the same magnitude (full jitter; deterministic under
+    ``seed`` so load runs reproduce).  ``max_retries=0`` disables retry —
+    the pre-existing behavior."""
+    max_retries: int = 0
+    base_ms: float = 2.0
+    seed: int = 0
+
+    def backoff_s(self, attempt: int, rng: np.random.Generator) -> float:
+        step = self.base_ms * (2.0 ** attempt) / 1e3
+        return step + float(rng.uniform(0.0, step))
+
+
+NO_RETRY = RetryPolicy()
 
 
 def sample_queries(engine, n_queries: int, words_per_query: int = 3, *,
@@ -153,6 +176,14 @@ class LoadReport:
     service_ms: np.ndarray = dataclasses.field(
         default_factory=lambda: np.empty(0))
     stages: dict | None = None
+    # anytime/SLA accounting (DESIGN.md §11): degraded = admission shrank
+    # the budget; certified_fraction = certified slots / found slots over
+    # the served answers; retry_hist = attempts-needed -> requests (0 =
+    # first try; only present when a RetryPolicy was active)
+    n_degraded: int = 0
+    certified_fraction: float = 1.0
+    n_retried: int = 0
+    retry_hist: dict = dataclasses.field(default_factory=dict)
 
     @classmethod
     def from_latencies(cls, lats_s: list[float], n_shed: int, n_err: int,
@@ -178,53 +209,95 @@ class LoadReport:
 
     @classmethod
     def from_tickets(cls, tickets: list, n_shed: int, duration_s: float,
-                     server: SearchServer) -> "LoadReport":
-        """Build a report from completed/abandoned tickets: total latency
-        plus the queue-wait/service decomposition each ticket carries."""
+                     server: SearchServer, retry_hist: dict | None = None,
+                     ) -> "LoadReport":
+        """Build a report from completed tickets: total latency plus the
+        queue-wait/service decomposition each ticket carries.  Tickets
+        finalized with :class:`RequestTimeout` count as timeouts (the
+        loadgen *cancels* in-flight tickets at its deadline — none are ever
+        left dangling to complete into a later window); other errors count
+        as ``n_err``; still-undone tickets (a caller that skipped the cancel
+        pass) also count as timeouts."""
         ok = [t for t in tickets
               if t.done() and t.error is None and t.latency_s is not None]
-        errs = sum(1 for t in tickets if t.done() and t.error is not None)
-        timeouts = sum(1 for t in tickets if not t.done())
-        return cls.from_latencies(
+        timeouts = sum(1 for t in tickets if not t.done()
+                       or isinstance(t.error, RequestTimeout))
+        errs = sum(1 for t in tickets if t.done() and t.error is not None
+                   and not isinstance(t.error, RequestTimeout))
+        slots = cert = 0
+        for t in ok:
+            row = t._result
+            n = getattr(row, "n_found", 0)
+            slots += n
+            nc = getattr(row, "n_certified", None)
+            cert += n if nc is None else nc
+        rep = cls.from_latencies(
             [t.latency_s for t in ok], n_shed, errs, duration_s, server,
             n_timeout=timeouts,
             queue_s=[t.queue_wait_s for t in ok],
             service_s=[t.service_s for t in ok])
+        rep.n_degraded = sum(1 for t in tickets
+                             if getattr(t, "degraded", False))
+        rep.certified_fraction = cert / slots if slots else 1.0
+        if retry_hist:
+            rep.retry_hist = dict(sorted(retry_hist.items()))
+            rep.n_retried = sum(c for a, c in retry_hist.items() if a > 0)
+        return rep
 
     def summary(self) -> str:
         out = (f"{self.n_ok} ok / {self.n_shed} shed / {self.n_err} err in "
                f"{self.duration_s:.2f}s"
                f" | {self.qps:.0f} q/s | p50 {self.p50_ms:.1f}ms"
                f" | p95 {self.p95_ms:.1f}ms | p99 {self.p99_ms:.1f}ms")
+        if self.n_degraded or self.certified_fraction < 1.0:
+            out += (f" | {self.n_degraded} degraded | certified "
+                    f"{self.certified_fraction:.3f}")
+        if self.n_retried:
+            out += f" | {self.n_retried} retried {self.retry_hist}"
+        if self.n_timeout:
+            out += f" | {self.n_timeout} timed out"
         if len(self.queue_ms):
             out += (f" | queue p50/p95/p99 {self.queue_p50_ms:.1f}/"
                     f"{self.queue_p95_ms:.1f}/{self.queue_p99_ms:.1f}ms"
                     f" | service p50/p95/p99 {self.service_p50_ms:.1f}/"
                     f"{self.service_p95_ms:.1f}/{self.service_p99_ms:.1f}ms")
-        if self.n_timeout:
-            out += f" | {self.n_timeout} STILL IN FLIGHT at deadline"
         return out
 
 
 def closed_loop(server: SearchServer, workload: list, *,
                 n_workers: int = 8, profile=DEFAULT_PROFILE,
-                timeout_s: float = 120.0) -> LoadReport:
+                timeout_s: float = 120.0,
+                retry: RetryPolicy = NO_RETRY) -> LoadReport:
     """``n_workers`` clients drain ``workload`` back-to-back (one outstanding
-    request per client — arrival rate adapts to service rate)."""
+    request per client — arrival rate adapts to service rate).  With a
+    :class:`RetryPolicy`, a shed request is retried after jittered backoff
+    up to ``retry.max_retries`` times before counting as shed; the report's
+    ``retry_hist`` maps attempts-needed -> admitted requests."""
     it = iter(range(len(workload)))
     it_lock = threading.Lock()
     done_tickets: list = []          # retained for the queue/service split
     shed = [0]
+    retry_hist: dict[int, int] = {}
+    rngs = [np.random.default_rng(retry.seed + w) for w in range(n_workers)]
 
-    def client():
+    def client(w: int):
         while True:
             with it_lock:
                 i = next(it, None)
             if i is None:
                 return
-            try:
-                tk = server.submit(workload[i], profile)
-            except ShedError:       # closed loop + bounded queue: count & move on
+            tk = None
+            for attempt in range(retry.max_retries + 1):
+                try:
+                    tk = server.submit(workload[i], profile)
+                except ShedError:
+                    if attempt < retry.max_retries:
+                        time.sleep(retry.backoff_s(attempt, rngs[w]))
+                    continue
+                with it_lock:
+                    retry_hist[attempt] = retry_hist.get(attempt, 0) + 1
+                break
+            if tk is None:          # every attempt shed
                 with it_lock:
                     shed[0] += 1
                 continue
@@ -235,39 +308,67 @@ def closed_loop(server: SearchServer, workload: list, *,
             with it_lock:
                 done_tickets.append(tk)
 
-    threads = [threading.Thread(target=client) for _ in range(n_workers)]
+    threads = [threading.Thread(target=client, args=(w,))
+               for w in range(n_workers)]
     t0 = time.monotonic()
     for t in threads:
         t.start()
     for t in threads:
         t.join()
     return LoadReport.from_tickets(done_tickets, shed[0],
-                                   time.monotonic() - t0, server)
+                                   time.monotonic() - t0, server,
+                                   retry_hist=retry_hist or None)
 
 
 def open_loop(server: SearchServer, workload: list, *, target_qps: float,
               profile=DEFAULT_PROFILE, poisson: bool = True, seed: int = 0,
-              timeout_s: float = 120.0) -> LoadReport:
+              timeout_s: float = 120.0,
+              retry: RetryPolicy = NO_RETRY) -> LoadReport:
     """Submit ``workload`` on a Poisson/fixed schedule at ``target_qps`` and
-    wait for completions; sheds count, they don't block the schedule."""
+    wait for completions; sheds count, they don't block the schedule.
+
+    With a :class:`RetryPolicy`, shed requests are re-queued after jittered
+    backoff as *extra* arrivals (deferred — the original schedule is never
+    blocked, matching how an open-loop client fleet actually behaves).
+
+    At the wait deadline every still-in-flight ticket is **cancelled**
+    (:meth:`Ticket.cancel` with :class:`RequestTimeout`): a late engine
+    completion can no longer resurrect it, so the report's timeout count is
+    final and nothing leaks into a later measurement window."""
     if target_qps <= 0:
         raise ValueError(f"target_qps must be > 0, got {target_qps}")
     rng = np.random.default_rng(seed)
     gaps = (rng.exponential(1.0 / target_qps, size=len(workload)) if poisson
             else np.full(len(workload), 1.0 / target_qps))
-    arrivals = np.cumsum(gaps)
-    tickets, shed = [], 0
     t0 = time.monotonic()
-    for q, at in zip(workload, arrivals):
+    # event list: (due_time_rel, query, attempt); retries merge in deferred
+    schedule = [(float(at), q, 0) for q, at in zip(workload, np.cumsum(gaps))]
+    schedule.sort(key=lambda e: -e[0])      # pop() takes the earliest
+    tickets, shed = [], 0
+    retry_hist: dict[int, int] = {}
+    while schedule:
+        at, q, attempt = schedule.pop()
         lag = t0 + at - time.monotonic()
         if lag > 0:
             time.sleep(lag)
         try:
             tickets.append(server.submit(q, profile))
+            retry_hist[attempt] = retry_hist.get(attempt, 0) + 1
         except ShedError:
-            shed += 1
+            if attempt < retry.max_retries:
+                due = (time.monotonic() - t0) + retry.backoff_s(attempt, rng)
+                schedule.append((due, q, attempt + 1))
+                schedule.sort(key=lambda e: -e[0])
+            else:
+                shed += 1
     deadline = time.monotonic() + timeout_s
     for t in tickets:
         t._event.wait(max(0.0, deadline - time.monotonic()))
+    for t in tickets:                # finalize stragglers: no ticket leaks
+        if not t.done():
+            t.cancel(RequestTimeout(
+                f"open_loop gave up after {timeout_s}s"))
     duration = time.monotonic() - t0
-    return LoadReport.from_tickets(tickets, shed, duration, server)
+    return LoadReport.from_tickets(
+        tickets, shed, duration, server,
+        retry_hist=retry_hist if retry.max_retries else None)

@@ -47,16 +47,29 @@ import time
 import numpy as np
 
 import repro.obs as obs
+from repro.engine.config import SLA_CLASSES
 from repro.obs.tracing import Timeline, stage_durations
+from repro.runtime.fault_tolerance import StragglerWatchdog
 from repro.serve.batcher import (DEFAULT_LANE, Batch, Lane, MicroBatcher,
                                  QueryProfile, work_bucket)
 from repro.serve.cache import LRUCache
 
 DEFAULT_PROFILE = QueryProfile()
 
+# degradation floor (DESIGN.md §11): the smallest anytime budget degraded
+# serving will shrink to — below this a search returns so little that
+# shedding is more honest than serving it
+MIN_BUDGET = 8
+
 
 class ShedError(RuntimeError):
     """Admission queue full — request rejected without queueing (shed load)."""
+
+
+class RequestTimeout(TimeoutError):
+    """A waiter gave up on a ticket and *finalized* it (:meth:`Ticket.cancel`)
+    — distinct from ``ShedError`` (never admitted) and from dispatch errors
+    (the engine failed); load reports bucket the three separately."""
 
 
 @dataclasses.dataclass
@@ -65,6 +78,10 @@ class RowResult:
 
     ``docs``/``scores`` are the (k,) ranked answer; ``n_found`` how many are
     real; diagnostics mirror ``SearchResults.diagnostics`` per row.
+
+    ``certified``/``score_bound``/``sla`` are the anytime contract
+    (DESIGN.md §11): certified slots provably equal the exact oracle's;
+    ``score_bound`` caps the score of everything not returned.
     """
     docs: np.ndarray
     scores: np.ndarray
@@ -79,11 +96,22 @@ class RowResult:
     padded: int | None = None
     match_pos: np.ndarray | None = None
     match_len: np.ndarray | None = None
+    certified: np.ndarray | None = None
+    score_bound: float | None = None
+    sla: str = "exact"
 
     def hits(self) -> list[tuple[int, float]]:
         n = self.n_found
         return [(int(d), float(s))
                 for d, s in zip(self.docs[:n], self.scores[:n])]
+
+    @property
+    def n_certified(self) -> int:
+        """Certified result slots (== ``n_found`` when no data: exhaustive
+        paths are exact end to end)."""
+        if self.certified is None:
+            return self.n_found
+        return int(np.sum(self.certified[:self.n_found]))
 
 
 class Ticket:
@@ -95,8 +123,8 @@ class Ticket:
     is enabled)."""
 
     __slots__ = ("words", "profile", "t_submit", "t_dispatch", "t_done",
-                 "cache_hit", "batch_size", "timeline",
-                 "_event", "_result", "_error")
+                 "cache_hit", "batch_size", "timeline", "degraded",
+                 "_event", "_result", "_error", "_lock")
 
     def __init__(self, words, profile):
         self.words = words
@@ -106,13 +134,31 @@ class Ticket:
         self.t_done = None
         self.cache_hit = False
         self.batch_size = 0
+        self.degraded = False     # admission shrank the budget under load
         self.timeline: Timeline | None = None
         self._event = threading.Event()
         self._result = None
         self._error = None
+        self._lock = threading.Lock()   # guards the complete/cancel race
 
     def done(self) -> bool:
         return self._event.is_set()
+
+    def cancel(self, error: Exception) -> bool:
+        """Resolve this ticket with ``error`` unless it already completed —
+        the loadgen's timeout path (satellite of DESIGN.md §11): a timed-out
+        ticket is *finalized*, never abandoned, so a late dispatch completion
+        cannot resurrect it and leak into a later measurement window.
+        Returns True if this call won the race."""
+        with self._lock:
+            if self._event.is_set():
+                return False
+            self._error = error
+            self.t_done = time.monotonic()
+            if self.timeline is not None:
+                self.timeline.mark("complete", self.t_done)
+            self._event.set()
+            return True
 
     @property
     def error(self) -> Exception | None:
@@ -157,11 +203,14 @@ class Ticket:
         return self.t_done - t0
 
     def _complete(self, result=None, error=None):
-        self._result, self._error = result, error
-        self.t_done = time.monotonic()
-        if self.timeline is not None:
-            self.timeline.mark("complete", self.t_done)
-        self._event.set()
+        with self._lock:
+            if self._event.is_set():      # lost the race to cancel()
+                return
+            self._result, self._error = result, error
+            self.t_done = time.monotonic()
+            if self.timeline is not None:
+                self.timeline.mark("complete", self.t_done)
+            self._event.set()
 
 
 class SearchServer:
@@ -211,9 +260,17 @@ class SearchServer:
         self._draining = False       # swap in progress: shed new admissions
         self._n_inflight = 0         # admitted, not yet completed/errored
         self._lock = threading.Lock()
+        # degraded serving engages when the admission backlog crosses this
+        # (DESIGN.md §11): non-exact traffic gets its budget shrunk so the
+        # queue drains instead of growing into the shed wall
+        self._degrade_at = max(1, (3 * queue_depth) // 4)
+        self._watchdog = StragglerWatchdog()     # dispatch-batch step times
+        self._step = 0                           # watchdog step counter
         self.n_submitted = 0
         self.n_served = 0
         self.n_shed = 0
+        self.n_degraded = 0
+        self.n_stragglers = 0
         self.n_errors = 0
         self.n_swaps = 0
         self.n_overflowed = 0        # served rows whose heap latched overflow
@@ -225,7 +282,10 @@ class SearchServer:
         self._m_req = {o: self.obs.counter(req, {"outcome": o},
                                            "requests by terminal outcome")
                        for o in ("submitted", "served", "shed", "error",
-                                 "cache_hit")}
+                                 "cache_hit", "degraded")}
+        self._m_straggler = self.obs.counter(
+            "repro_server_straggler_batches_total", None,
+            "dispatch batches the step-time watchdog flagged slow")
         self._m_swaps = self.obs.counter("repro_server_swaps_total", None,
                                          "engine hot-swaps completed")
         self._m_overflow = self.obs.counter(
@@ -268,11 +328,20 @@ class SearchServer:
                ) -> int:
         """Precompile every (batch bucket, Q bucket) executor this server's
         coalescing can produce for ``profile`` — call before admitting
-        traffic so no request ever pays a compile.  Returns the number of
-        executors compiled."""
-        return self.engine.warmup(example_queries,
-                                  max_batch=self._batcher.max_batch,
-                                  **profile.search_kwargs())
+        traffic so no request ever pays a compile.  Also precompiles the
+        *effective* profile admission would resolve this one into
+        (DESIGN.md §11: a ``deadline_ms`` becomes a concrete pop budget at
+        submit), so a deadline-carrying profile doesn't pay its compile on
+        the first real request.  Returns the number of executors compiled."""
+        n = self.engine.warmup(example_queries,
+                               max_batch=self._batcher.max_batch,
+                               **profile.search_kwargs())
+        eff, _ = self._effective(profile, None)
+        if eff != profile:
+            n += self.engine.warmup(example_queries,
+                                    max_batch=self._batcher.max_batch,
+                                    **eff.search_kwargs())
+        return n
 
     # -- request path --------------------------------------------------------
 
@@ -320,14 +389,81 @@ class SearchServer:
         heavy = work >= self.heavy_df
         return Lane(bucket=work_bucket(work), cap=1 if heavy else None)
 
-    def submit(self, words, profile: QueryProfile = DEFAULT_PROFILE) -> Ticket:
+    def _effective(self, profile: QueryProfile,
+                   deadline_ms: float | None) -> tuple[QueryProfile, bool]:
+        """Resolve a request's admission-time SLA into the *effective*
+        profile the engine will run (DESIGN.md §11 degradation ladder):
+
+        1. ``sla`` defaults per the engine config, auto-promoted to
+           "bounded" when the request carries a budget or deadline;
+        2. a deadline becomes a pop budget at the live us/pop estimate
+           (min-combined with an explicit budget);
+        3. under queue pressure (backlog >= 3/4 depth) non-exact traffic is
+           *degraded*: sla forced to "best_effort", budget shrunk 4x (floor
+           ``MIN_BUDGET``) so admitted work drains the backlog;
+        4. shedding (queue physically full / draining) stays in submit —
+           it is the ladder's last rung, not a profile.
+
+        Returns ``(effective_profile, degraded)``; the effective profile has
+        ``deadline_ms=None`` (already folded into ``budget``), so batcher
+        grouping and cache keys see only concrete executor knobs.
+        """
+        dl = deadline_ms if deadline_ms is not None else profile.deadline_ms
+        sla = profile.sla
+        if sla is not None and sla not in SLA_CLASSES:
+            raise ValueError(f"unknown sla {sla!r}; expected one of "
+                             f"{SLA_CLASSES}")
+        if dl is not None and float(dl) <= 0:
+            raise ValueError(f"deadline_ms must be positive, got {dl}")
+        anytime = profile.budget is not None or dl is not None
+        if sla is None:
+            cfg = getattr(self.engine, "config", None)
+            sla = "bounded" if anytime else \
+                getattr(cfg, "default_sla", "exact")
+        if sla == "exact":
+            if anytime:
+                raise ValueError("sla='exact' guarantees an uninterrupted "
+                                 "search — budget/deadline_ms require "
+                                 "sla='bounded' or 'best_effort'")
+            if profile.sla == "exact" and profile.deadline_ms is None:
+                return profile, False
+            return dataclasses.replace(profile, sla="exact",
+                                       deadline_ms=None), False
+        budget = profile.budget
+        if dl is not None:
+            conv = getattr(self.engine, "budget_for_deadline", None)
+            if conv is not None:
+                db = conv(dl)
+                if db is not None:
+                    budget = db if budget is None else min(int(budget), db)
+        degraded = False
+        if self._queue.qsize() >= self._degrade_at:
+            from repro.engine.facade import budget_bucket
+            full = 2 * int(getattr(self.engine, "n_docs", 1 << 29)) + 2
+            base = full if budget is None else int(budget)
+            budget = max(MIN_BUDGET, budget_bucket(max(1, base // 4)))
+            if budget >= full:      # tiny corpora: the "shrunk" budget
+                budget = MIN_BUDGET  # must actually cut work
+            sla, degraded = "best_effort", True
+        return dataclasses.replace(profile, sla=sla, budget=budget,
+                                   deadline_ms=None), degraded
+
+    def submit(self, words, profile: QueryProfile = DEFAULT_PROFILE,
+               deadline_ms: float | None = None) -> Ticket:
         """Admit one query; never blocks.  Cache hits complete immediately;
         a full admission queue — or a drain in progress (:meth:`swap_engine`)
-        — raises :class:`ShedError`."""
+        — raises :class:`ShedError`.  ``deadline_ms`` overrides the
+        profile's own; see :meth:`_effective` for the SLA ladder."""
         if self._thread is None:
             raise RuntimeError("server not started")
         key = self._normalize(words, profile)
+        profile, degraded = self._effective(profile, deadline_ms)
         ticket = Ticket(key, profile)
+        ticket.degraded = degraded
+        if degraded:
+            with self._lock:
+                self.n_degraded += 1
+            self._m_req["degraded"].inc()
         if self.obs.enabled:
             ticket.timeline = Timeline(ticket.t_submit)
         with self._lock:
@@ -369,9 +505,11 @@ class SearchServer:
         return ticket
 
     def search(self, words, profile: QueryProfile = DEFAULT_PROFILE,
-               timeout: float | None = 60.0) -> RowResult:
+               timeout: float | None = 60.0,
+               deadline_ms: float | None = None) -> RowResult:
         """Blocking submit -> result."""
-        return self.submit(words, profile).result(timeout)
+        return self.submit(words, profile, deadline_ms=deadline_ms
+                           ).result(timeout)
 
     def swap_engine(self, new_engine, *, drain_timeout: float = 60.0):
         """Hot-swap the engine: **drain -> swap -> clear cache**.
@@ -460,6 +598,20 @@ class SearchServer:
                 if t.timeline is not None:
                     t.timeline.mark("device", t_dev)
         dt = time.monotonic() - t0
+        self._step += 1
+        if self._watchdog.observe(self._step, dt):
+            with self._lock:
+                self.n_stragglers += 1
+            self._m_straggler.inc()
+        # feed the engine's deadline->budget estimator from *unbudgeted*
+        # batches (a budget-cut batch would bias the pop cost optimistic)
+        pops_arr = getattr(res, "pops", None)
+        if batch.profile.budget is None and pops_arr is not None:
+            note = getattr(self.engine, "note_cost", None)
+            if note is not None:
+                p = np.asarray(pops_arr).ravel()
+                if len(p):
+                    note(dt, float(p.mean()))
         rows = _slice_rows(res, batch.n_real)
         if self.obs.enabled:
             t_slice = time.monotonic()
@@ -504,6 +656,8 @@ class SearchServer:
                 "submitted": self.n_submitted,
                 "served": self.n_served,
                 "shed": self.n_shed,
+                "degraded": self.n_degraded,
+                "stragglers": self.n_stragglers,
                 "errors": self.n_errors,
                 "swaps": self.n_swaps,
                 "inflight": self._n_inflight,
@@ -534,6 +688,11 @@ def _slice_rows(res, n_real: int) -> list[RowResult]:
     over = None if res.overflowed is None else np.asarray(res.overflowed)
     pad = getattr(res, "padded", None)       # dummy engines may omit the field
     pad = None if pad is None else np.asarray(pad)
+    cert = getattr(res, "certified", None)
+    cert = None if cert is None else np.asarray(cert)
+    bnd = getattr(res, "score_bound", None)
+    bnd = None if bnd is None else np.asarray(bnd)
+    sla = getattr(res, "sla", "exact")
     mp = None if res.match_pos is None else np.asarray(res.match_pos)
     ml = None if res.match_len is None else np.asarray(res.match_len)
     return [RowResult(
@@ -543,5 +702,8 @@ def _slice_rows(res, n_real: int) -> list[RowResult]:
         pops=None if pops is None else int(pops[b]),
         overflowed=None if over is None else bool(over[b]),
         padded=None if pad is None else int(pad[b]),
+        certified=None if cert is None else cert[b],
+        score_bound=None if bnd is None else float(bnd[b]),
+        sla=sla,
         match_pos=None if mp is None else mp[b],
         match_len=None if ml is None else ml[b]) for b in range(n_real)]

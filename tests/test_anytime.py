@@ -1,0 +1,174 @@
+"""Anytime deadline-bounded search (DESIGN.md §11) — facade-level contract.
+
+* **no-budget invariance**: searches without anytime knobs are bitwise
+  identical to a run with a budget too large to bind (and the engine
+  normalizes such a budget onto the very same compiled executor);
+* **certified = oracle**: a 200+-case differential sweep where budgets DO
+  bind — every certified slot equals the exact oracle slot, certified bits
+  form a prefix, the score bound caps everything absent;
+* **deadline -> budget**: the live us/pop estimate converts wall deadlines
+  into pow-4-bucketed pop budgets (drift never recompiles), sla='exact'
+  rejects every anytime knob;
+* **sharded budgets**: the per-shard budget threads through
+  ``distributed_topk`` and the merged result carries global certification.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import distributed
+from repro.engine import EngineConfig, SearchEngine
+from repro.engine.facade import DEFAULT_US_PER_POP, budget_bucket
+
+
+def test_budget_bucket_pow4_floor():
+    assert [budget_bucket(n) for n in (1, 2, 3, 4, 5, 15, 16, 63, 64, 1000)] \
+        == [1, 1, 1, 4, 4, 4, 16, 16, 64, 256]
+
+
+@pytest.fixture(scope="module")
+def wide_batch(engine_corpus):
+    """35 rows x 3 words — one batched call covers 35 sweep cases."""
+    df = engine_corpus.doc_freqs()
+    pool = np.flatnonzero((df >= 2) & (df <= 40))
+    rng = np.random.default_rng(11)
+    return np.stack([rng.choice(pool, 3, replace=False) for _ in range(35)])
+
+
+def test_no_budget_bitwise_and_executor_reuse(engine, wide_batch):
+    """A never-binding budget is normalized off: bitwise-equal answers AND
+    the same compiled executor (no key split) as the plain exact search."""
+    before = engine.stats["executors"]
+    exact = engine.search(wide_batch, k=8, mode="or")
+    mid = engine.stats["executors"]
+    huge = engine.search(wide_batch, k=8, mode="or", budget=10 ** 9)
+    assert engine.stats["executors"] == mid    # reused the exact program
+    for name in ("docs", "scores", "n_found"):
+        np.testing.assert_array_equal(np.asarray(getattr(exact, name)),
+                                      np.asarray(getattr(huge, name)))
+    assert exact.sla == "exact" and huge.sla == "bounded"
+    assert exact.certified is not None
+    assert int(np.asarray(exact.certified).sum()) == \
+        int(np.asarray(exact.n_found).sum())
+    del before
+
+
+@pytest.mark.parametrize("mode", ["and", "or"])
+@pytest.mark.parametrize("budget", [4, 16, 64])
+def test_certified_matches_oracle_sweep(engine, wide_batch, mode, budget):
+    """The differential sweep: 35 rows x 3 budgets x 2 modes = 210 cases.
+    Wherever the budget binds, certified slots must equal the exact oracle's
+    slots bitwise; uncertified tails must respect the score bound."""
+    exact = engine.search(wide_batch, k=8, mode=mode)
+    res = engine.search(wide_batch, k=8, mode=mode, budget=budget)
+    assert res.certified is not None and res.score_bound is not None
+    cert = np.asarray(res.certified)
+    bound = np.asarray(res.score_bound)
+    for b in range(len(wide_batch)):
+        assert not np.any(np.diff(cert[b].astype(int)) > 0), b   # prefix
+        nc = int(cert[b].sum())
+        np.testing.assert_array_equal(np.asarray(res.docs[b])[:nc],
+                                      np.asarray(exact.docs[b])[:nc])
+        np.testing.assert_array_equal(np.asarray(res.scores[b])[:nc],
+                                      np.asarray(exact.scores[b])[:nc])
+        nb = int(res.n_found[b])
+        got = set(np.asarray(res.docs[b])[:nb].tolist())
+        for d, sc in zip(np.asarray(exact.docs[b]),
+                         np.asarray(exact.scores[b])):
+            if d >= 0 and int(d) not in got:
+                assert sc <= bound[b] + 1e-6, (b, d, sc, bound[b])
+
+
+def test_drb_and_budget_all_or_nothing(engine, wide_batch):
+    """DRB/AND visits candidates in doc order -> certification is all-or-
+    nothing: complete rows fully certified, cut rows fully uncertified with
+    a +inf bound (an unexamined candidate may score anything)."""
+    exact = engine.search(wide_batch, k=8, mode="and", strategy="drb")
+    res = engine.search(wide_batch, k=8, mode="and", strategy="drb", budget=3)
+    cert = np.asarray(res.certified)
+    bound = np.asarray(res.score_bound)
+    cut = np.asarray(res.pops) < np.asarray(exact.pops)
+    for b in range(len(wide_batch)):
+        if cut[b]:
+            assert not cert[b].any() and bound[b] == np.inf
+        else:
+            filled = np.asarray(res.scores[b]) > -np.inf
+            np.testing.assert_array_equal(cert[b], filled)
+            assert bound[b] == -np.inf
+
+
+def test_deadline_converts_via_estimator(engine, wide_batch):
+    """deadline_ms -> pow-4 pop budget at the live us/pop estimate; updates
+    to the estimate within a bucket never split the executor key."""
+    eng = SearchEngine.build([np.arange(1, 40)] * 50)   # private estimator
+    assert eng.us_per_pop == DEFAULT_US_PER_POP
+    # 0.4ms at 50us/pop = 8 pops -> bucket 4
+    assert eng.budget_for_deadline(0.4) == 4
+    eng.note_cost(1e-3, 100.0)                          # 10us/pop
+    assert eng.us_per_pop == pytest.approx(10.0)
+    # 0.4ms at 10us/pop = 40 pops -> bucket 16
+    assert eng.budget_for_deadline(0.4) == 16
+    # drift within a bucket: 9.8us/pop -> 40 pops -> still bucket 16
+    eng.note_cost(0.9e-3, 100.0)
+    assert eng.us_per_pop == pytest.approx(9.8)
+    assert eng.budget_for_deadline(0.4) == 16
+    # affordable exhaustive search -> None (no executor split)
+    assert eng.budget_for_deadline(60_000) is None
+    res = engine.search(wide_batch, k=8, mode="or", deadline_ms=60_000)
+    assert res.sla == "bounded"
+    exact = engine.search(wide_batch, k=8, mode="or")
+    np.testing.assert_array_equal(np.asarray(res.docs),
+                                  np.asarray(exact.docs))
+
+
+def test_sla_validation(engine, wide_batch):
+    with pytest.raises(ValueError, match="exact"):
+        engine.search(wide_batch, k=5, sla="exact", budget=9)
+    with pytest.raises(ValueError, match="exact"):
+        engine.search(wide_batch, k=5, sla="exact", deadline_ms=5.0)
+    with pytest.raises(ValueError, match="sla"):
+        engine.search(wide_batch, k=5, sla="turbo")
+    with pytest.raises(ValueError, match="deadline_ms"):
+        engine.search(wide_batch, k=5, deadline_ms=0.0)
+    with pytest.raises(ValueError, match="deadline_ms"):
+        engine.search(wide_batch, k=5, mode="phrase", deadline_ms=5.0)
+    with pytest.raises(ValueError, match="default_sla"):
+        EngineConfig(default_sla="fastest")
+    res = engine.search(wide_batch, k=5, mode="or", budget=16,
+                        sla="best_effort")
+    assert res.sla == "best_effort"
+
+
+def test_sharded_budget_threads_through(small_corpus):
+    """Per-shard anytime budget on the sharded backend (1-shard CPU mesh):
+    merged results carry global certified bits + bound; certified slots
+    match the single-host exact oracle."""
+    sharded, model = distributed.build_sharded(
+        small_corpus.doc_tokens, small_corpus.vocab_size, n_shards=1,
+        block=512)
+    mesh = jax.sharding.Mesh(np.array(jax.devices()[:1]), ("shards",))
+    df = small_corpus.doc_freqs()
+    pool = np.flatnonzero((df >= 2) & (df <= 40))
+    rng = np.random.default_rng(21)
+    words = jnp.asarray(rng.choice(pool, 3, replace=False), jnp.int32)[None]
+    wmask = jnp.ones((1, 3), bool)
+    exact = distributed.distributed_topk(
+        sharded, words, wmask, k=8, method="dr-or", mesh=mesh,
+        shard_axes="shards")
+    assert exact.certified is not None
+    res = distributed.distributed_topk(
+        sharded, words, wmask, k=8, method="dr-or", mesh=mesh,
+        shard_axes="shards", max_pops=8)
+    cert = np.asarray(res.certified)[0]
+    assert not np.any(np.diff(cert.astype(int)) > 0)
+    nc = int(cert.sum())
+    np.testing.assert_array_equal(np.asarray(res.docs)[0][:nc],
+                                  np.asarray(exact.docs)[0][:nc])
+    # never-binding per-shard budget: same docs/scores as exact
+    nb = distributed.distributed_topk(
+        sharded, words, wmask, k=8, method="dr-or", mesh=mesh,
+        shard_axes="shards", max_pops=10 ** 6)
+    np.testing.assert_array_equal(np.asarray(exact.docs), np.asarray(nb.docs))
+    np.testing.assert_array_equal(np.asarray(exact.scores),
+                                  np.asarray(nb.scores))

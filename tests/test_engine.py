@@ -82,9 +82,17 @@ def test_dr_rejects_bm25(engine, query_batch):
         engine.search(query_batch, k=5, strategy="dr", measure="bm25")
 
 
-def test_budget_rejected_on_drb(engine, query_batch):
-    with pytest.raises(ValueError, match="budget"):
-        engine.search(query_batch, k=5, strategy="drb", budget=10)
+def test_budget_on_drb(engine, query_batch):
+    """DRB/AND accepts an anytime budget (all-or-nothing certification,
+    DESIGN.md §11); the loop-free DRB/OR path silently normalizes it off —
+    same answers as an unbudgeted run, everything certified."""
+    res = engine.search(query_batch, k=5, strategy="drb", budget=10)
+    assert res.sla == "bounded" and res.certified is not None
+    ro = engine.search(query_batch, k=5, strategy="drb", mode="or", budget=10)
+    r2 = engine.search(query_batch, k=5, strategy="drb", mode="or")
+    np.testing.assert_array_equal(np.asarray(ro.docs), np.asarray(r2.docs))
+    assert bool(np.all(np.asarray(ro.certified)
+                       == (np.asarray(ro.scores) > -np.inf)))
 
 
 def test_input_validation(engine, query_batch):

@@ -1,0 +1,192 @@
+"""Fault-injection units (DESIGN.md §11) — the fast, deterministic slices.
+
+The heavyweight end-to-end suite lives in ``repro.serve.faults`` (run by the
+CI ``anytime-smoke`` job as ``python -m repro.serve.faults``); these tests
+pin the individual mechanisms it composes: ticket finalization races, the
+retry/backoff policy, the admission degradation ladder, and cache-poison
+unreachability — each small enough for tier-1.
+"""
+import queue
+
+import numpy as np
+import pytest
+
+from repro.serve.batcher import QueryProfile
+from repro.serve.faults import (POISON_DOC, FaultPlan, FaultyEngine,
+                                InjectedDispatchError, poison_cache)
+from repro.serve.loadgen import (LoadReport, RetryPolicy, closed_loop,
+                                 sample_queries)
+from repro.serve.server import (MIN_BUDGET, RequestTimeout, RowResult,
+                                SearchServer, ShedError, Ticket)
+
+
+def _row(k=4):
+    return RowResult(docs=np.zeros(k, np.int32), scores=np.zeros(k, np.float32),
+                     n_found=k, work=1, k=k, mode="or", strategy="dr",
+                     measure="tfidf")
+
+
+# -- ticket finalization ----------------------------------------------------
+
+def test_ticket_cancel_beats_late_complete():
+    t = Ticket(np.arange(3), QueryProfile(mode="or", k=4))
+    assert t.cancel(RequestTimeout("deadline")) is True
+    assert t.done()
+    t._complete(result=_row())          # late dispatch: must NOT resurrect
+    with pytest.raises(RequestTimeout):
+        t.result(0.0)
+    assert t.cancel(RequestTimeout("again")) is False   # already finalized
+
+
+def test_ticket_complete_beats_late_cancel():
+    t = Ticket(np.arange(3), QueryProfile(mode="or", k=4))
+    t._complete(result=_row())
+    assert t.cancel(RequestTimeout("too late")) is False
+    assert t.result(0.0).n_found == 4 and t.error is None
+
+
+def test_report_classifies_timeout_vs_error():
+    served = Ticket(np.arange(2), QueryProfile())
+    served._complete(result=_row())
+    timed = Ticket(np.arange(2), QueryProfile())
+    timed.cancel(RequestTimeout("gave up"))
+    errored = Ticket(np.arange(2), QueryProfile())
+    errored._complete(error=InjectedDispatchError("boom"))
+
+    class _Stub:
+        stats = {}
+    rep = LoadReport.from_tickets([served, timed, errored], 0, 1.0, _Stub(),
+                                  retry_hist={0: 2, 1: 1})
+    assert (rep.n_ok, rep.n_timeout, rep.n_err) == (1, 1, 1)
+    assert rep.n_retried == 1 and rep.retry_hist == {0: 2, 1: 1}
+
+
+# -- retry policy -----------------------------------------------------------
+
+def test_retry_backoff_bounded_jitter():
+    pol = RetryPolicy(max_retries=3, base_ms=2.0, seed=7)
+    rng = np.random.default_rng(7)
+    for attempt in range(4):
+        lo = pol.base_ms * (2 ** attempt) / 1e3
+        for _ in range(16):
+            b = pol.backoff_s(attempt, rng)
+            assert lo <= b <= 2 * lo, (attempt, b)
+    # seeded determinism: same rng seed -> same backoff sequence
+    a = [pol.backoff_s(1, np.random.default_rng(3)) for _ in range(3)]
+    assert a[0] == a[1] == a[2]
+
+
+def test_closed_loop_retries_sheds():
+    """A server that sheds each query once then serves it: every request
+    must land on attempt 1 (retry_hist {1: n}), none shed in the report."""
+    class FlakyServer:
+        stats = {}
+
+        def __init__(self):
+            self.seen = set()
+
+        def submit(self, words, profile):
+            key = int(np.asarray(words)[0])
+            if key not in self.seen:
+                self.seen.add(key)
+                raise ShedError("transient overload")
+            t = Ticket(words, profile)
+            t._complete(result=_row())
+            return t
+
+    workload = [np.array([i, i + 1, i + 2]) for i in range(6)]
+    rep = closed_loop(FlakyServer(), workload, n_workers=2, timeout_s=5.0,
+                      retry=RetryPolicy(max_retries=2, base_ms=0.1, seed=0))
+    assert rep.n_shed == 0 and rep.n_ok == 6
+    assert rep.retry_hist == {1: 6} and rep.n_retried == 6
+
+
+def test_closed_loop_exhausted_retries_count_as_shed():
+    class AlwaysShed:
+        stats = {}
+
+        def submit(self, words, profile):
+            raise ShedError("full")
+
+    rep = closed_loop(AlwaysShed(), [np.arange(3)] * 4, n_workers=2,
+                      timeout_s=5.0,
+                      retry=RetryPolicy(max_retries=1, base_ms=0.1, seed=0))
+    assert rep.n_shed == 4 and rep.n_ok == 0 and rep.n_retried == 0
+
+
+# -- admission degradation ladder -------------------------------------------
+
+def test_effective_ladder(engine):
+    srv = SearchServer(engine, max_batch=2, max_wait_ms=0.1, queue_depth=8)
+    exact = QueryProfile(mode="or", k=8)
+    eff, deg = srv._effective(exact, None)
+    assert not deg and eff.sla in (None, "exact") and eff.budget is None
+
+    bounded = QueryProfile(mode="or", k=8, budget=64)
+    eff, deg = srv._effective(bounded, None)
+    assert not deg and eff.sla == "bounded" and eff.budget == 64
+
+    # a deadline folds into a pow-4 budget at the live us/pop estimate;
+    # the effective profile carries budget only (cache/batch keys see
+    # concrete executor knobs)
+    db = engine.budget_for_deadline(0.4)
+    eff, deg = srv._effective(QueryProfile(mode="or", k=8), 0.4)
+    assert eff.deadline_ms is None and eff.sla == "bounded"
+    assert eff.budget == db
+    if db is not None:
+        assert db & (db - 1) == 0                 # pow-4 bucketed
+
+    # queue pressure: non-exact traffic degrades (budget shrunk 4x,
+    # floored at MIN_BUDGET), exact traffic is never silently degraded
+    while srv._queue.qsize() < srv._degrade_at:
+        srv._queue.put_nowait(None)
+    eff, deg = srv._effective(bounded, None)
+    assert deg and eff.sla == "best_effort"
+    assert MIN_BUDGET <= eff.budget <= 16
+    assert eff.budget < 2 * engine.n_docs + 2     # actually cuts work
+    eff, deg = srv._effective(QueryProfile(mode="or", k=8, sla="exact"), None)
+    assert not deg and eff.sla == "exact"
+    with pytest.raises(ValueError, match="exact"):
+        srv._effective(QueryProfile(mode="or", k=8, sla="exact"), 5.0)
+    while True:                                   # leave the queue clean
+        try:
+            srv._queue.get_nowait()
+        except queue.Empty:
+            break
+
+
+def test_faulty_engine_is_seeded_and_transparent(engine):
+    plan = FaultPlan(p_error=0.5, seed=3)
+    a = FaultyEngine(engine, plan)
+    b = FaultyEngine(engine, plan)
+    assert a.n_docs == engine.n_docs          # delegation
+    q = np.asarray(sample_queries(engine, 1, seed=0)[0])[None]
+    outcomes = []
+    for eng in (a, b):
+        got = []
+        for _ in range(6):
+            try:
+                eng.search(np.asarray(q), k=4, mode="or")
+                got.append("ok")
+            except InjectedDispatchError:
+                got.append("err")
+        outcomes.append(got)
+    assert outcomes[0] == outcomes[1]         # same seed, same fault trace
+    assert "err" in outcomes[0] and "ok" in outcomes[0]
+    assert a.n_injected_errors == b.n_injected_errors > 0
+
+
+# -- cache poisoning --------------------------------------------------------
+
+def test_poisoned_cache_entry_never_served(engine):
+    profile = QueryProfile(mode="or", k=6)
+    q = sample_queries(engine, 1, seed=1)[0]
+    with SearchServer(engine, max_batch=2, max_wait_ms=0.1,
+                      queue_depth=8) as srv:
+        fake = poison_cache(srv, q, profile)
+        assert int(fake.docs[0]) == POISON_DOC
+        row = srv.search(q, profile, timeout=60.0)
+        assert row.n_found == 0 or int(row.docs[0]) != POISON_DOC
+        # the genuine answer is cached under the live tag; still clean
+        row2 = srv.search(q, profile, timeout=60.0)
+        assert int(row2.docs[0]) == int(row.docs[0])

@@ -78,8 +78,10 @@ def test_dr_emission_order_descending(small_index, tfidf):
     assert (np.diff(s) <= 1e-5).all()      # emitted most-relevant-first
 
 
-def test_dr_anytime_budget_prefix(small_index, tfidf):
-    """max_pops budget: results are a prefix of the exact ranking."""
+def test_dr_anytime_budget_certified(small_index, tfidf):
+    """max_pops budget (DESIGN.md §11): the *certified* slots are a prefix
+    and equal the exact ranking exactly; the score bound caps everything
+    the budget cut off; a never-binding budget is bitwise exact."""
     idx, _ = small_index
     idf = tfidf.idf(idx)
     rng = np.random.default_rng(5)
@@ -88,12 +90,32 @@ def test_dr_anytime_budget_prefix(small_index, tfidf):
     cap = 2 * int(idx.n_docs) + 4
     full = ranked.topk_dr(idx, words, wmask, idf, k=10, conjunctive=False,
                           heap_cap=cap)
+    assert int(np.asarray(full.certified).sum()) == int(full.n_found)
     budget = ranked.topk_dr(idx, words, wmask, idf, k=10, conjunctive=False,
                             heap_cap=cap, max_pops=int(full.iters) // 2)
+    cert = np.asarray(budget.certified)
+    assert not np.any(np.diff(cert.astype(int)) > 0)      # prefix property
+    nc = int(cert.sum())
+    np.testing.assert_array_equal(np.asarray(budget.docs)[:nc],
+                                  np.asarray(full.docs)[:nc])
+    np.testing.assert_array_equal(np.asarray(budget.scores)[:nc],
+                                  np.asarray(full.scores)[:nc])
+    # returned slots stay best-first; the bound caps every absent doc
     nb = int(budget.n_found)
-    assert nb <= int(full.n_found)
-    assert np.allclose(np.asarray(budget.scores)[:nb],
-                       np.asarray(full.scores)[:nb], atol=1e-5)
+    s = np.asarray(budget.scores)[:nb]
+    assert (np.diff(s) <= 1e-6).all()
+    got = set(np.asarray(budget.docs)[:nb].tolist())
+    bound = float(budget.bound)
+    for d, sc in zip(np.asarray(full.docs), np.asarray(full.scores)):
+        if d >= 0 and int(d) not in got:
+            assert sc <= bound + 1e-6
+    # a budget that never binds changes nothing (bitwise)
+    nb2 = ranked.topk_dr(idx, words, wmask, idf, k=10, conjunctive=False,
+                         heap_cap=cap, max_pops=2 * int(idx.n_docs) + 2)
+    np.testing.assert_array_equal(np.asarray(full.docs), np.asarray(nb2.docs))
+    np.testing.assert_array_equal(np.asarray(full.scores),
+                                  np.asarray(nb2.scores))
+    assert int(np.asarray(nb2.certified).sum()) == int(nb2.n_found)
 
 
 def test_dr_batch_vmap(small_index, tfidf):
